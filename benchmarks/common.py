@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows, where
+`derived` carries the figure's headline quantity (error/iterations/
+ratio), so `python -m benchmarks.run` is grep-able.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import WVConfig, WVMethod, program_columns
+
+WEIGHT_LSB = 8.06  # sqrt(65): cell-domain rms -> B=6 two-slice weight rms
+
+
+def timed(fn, *args, reps: int = 1):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def run_wv(cfg: WVConfig, n_columns: int = 512, seed: int = 0):
+    """Program random targets; returns per-column means dict + us/call."""
+    tkey, pkey = jax.random.split(jax.random.PRNGKey(seed))
+    targets = jax.random.randint(
+        tkey, (n_columns, cfg.n_cells), 0, cfg.device.levels
+    ).astype(jnp.float32)
+    fn = jax.jit(lambda k, t: program_columns(k, t, cfg))
+    (g, stats), us = timed(fn, pkey, targets)
+    return {
+        "rms_cell": float(jnp.mean(stats.rms_error_lsb)),
+        "rms_weight": float(jnp.mean(stats.rms_error_lsb)) * WEIGHT_LSB,
+        "iterations": float(jnp.mean(stats.iterations)),
+        "latency_us": float(jnp.mean(stats.latency_ns)) / 1e3,
+        "energy_nj": float(jnp.mean(stats.energy_pj)) / 1e3,
+        "reads": float(jnp.mean(stats.reads)),
+    }, us
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+ALL_METHODS = [WVMethod.CW_SC, WVMethod.MRA, WVMethod.HD_PV, WVMethod.HARP]

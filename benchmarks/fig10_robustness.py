@@ -1,0 +1,86 @@
+"""Figs. 10-11: end-task robustness vs verify-read noise, iso-footprint.
+
+Paper: CW-SC collapses above ~0.2-0.4 LSB read noise (>20% accuracy
+loss on CIFAR-10 at ~0.8 LSB); HD-PV/HARP stay within ~1-3% everywhere;
+the 64-cell/10-bit arrays (Fig. 11) show the same trend (the Hadamard
+gain grows with N).
+
+Dataset substitution (DESIGN.md Sec. 6): CIFAR/KWS are offline-
+unavailable, so the end task is a small LM trained on the synthetic
+bigram corpus, deployed through the identical quantize -> slice ->
+program -> read-back pipeline.  The metric is eval-loss degradation vs
+the clean quantized model (independent noise seeds for deploy/eval).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import NoiseConfig, WVConfig, WVMethod, default_config_for_array
+from repro.core.programmer import deploy_params
+from repro.data import SyntheticLM
+from repro.models import ModelConfig, init_params
+from repro.models.transformer import loss_fn
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.training import make_train_step, init_train_state, TrainState
+
+from .common import emit
+
+_METHODS = [WVMethod.CW_SC, WVMethod.HD_PV, WVMethod.HARP]
+
+
+def _train_tiny_lm(steps: int = 220):
+    cfg = ModelConfig(
+        name="bench-lm", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=64, dtype=jnp.float32,
+        attn_chunk_q=32, attn_chunk_kv=32, remat=False,
+    )
+    data = SyntheticLM(vocab_size=64, seq_len=64, global_batch=16, seed=3)
+    opt_cfg = AdamWConfig(lr_peak=1e-2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg, total_steps=steps))
+    for i in range(steps):
+        state, metrics = step(state, data.global_batch_at(i)._asdict())
+    eval_batch = data.global_batch_at(10_000)._asdict()
+    eval_fn = jax.jit(lambda p, b: loss_fn(p, b, cfg)[0])
+    return cfg, state.params, eval_fn, eval_batch
+
+
+def main(n_cells: int = 32, noise_points=(0.1, 0.4, 0.7)) -> dict:
+    cfg, params, eval_fn, eval_batch = _train_tiny_lm()
+    clean = float(eval_fn(params, eval_batch))
+    emit(f"fig10.n{n_cells}.clean", 0.0, f"eval_loss={clean:.4f}")
+
+    out = {}
+    for sigma in noise_points:
+        for m in _METHODS:
+            wv = default_config_for_array(n_cells).replace(
+                method=m, noise=NoiseConfig(sigma_read_lsb=sigma)
+            )
+            prog, report = deploy_params(
+                jax.random.PRNGKey(42), params, wv
+            )
+            loss = float(eval_fn(prog, eval_batch))
+            out[(sigma, m.value)] = loss - clean
+            emit(
+                f"fig10.n{n_cells}.sigma{sigma:g}.{m.value}",
+                0.0,
+                f"dloss={loss - clean:+.4f} rms_cell={report.rms_cell_error_lsb:.2f}",
+            )
+    # Trend assertions at severe noise: Hadamard-domain verification
+    # dominates the one-hot baseline.
+    hi = max(noise_points)
+    assert out[(hi, "hd_pv")] < out[(hi, "cw_sc")]
+    assert out[(hi, "harp")] < out[(hi, "cw_sc")]
+    return out
+
+
+def main_fig11() -> dict:
+    """64-cell columns with the 10-bit ADC (paper Fig. 11)."""
+    return main(n_cells=64, noise_points=(0.4, 0.7))
+
+
+if __name__ == "__main__":
+    main()
+    main_fig11()

@@ -1,0 +1,55 @@
+"""Fig. 13: per-column WV latency/energy vs read noise, 32x32 and 64x64.
+
+Paper trends asserted:
+  * CW-SC is competitive at very low noise (<= 0.1 LSB) but its latency
+    grows steeply with noise (misdirected updates -> extra iterations);
+    above ~0.4 LSB it is the slowest.
+  * HD-PV / HARP latency grows only modestly (paper: 16%/17% at 32x32,
+    9.7%/8.9% at 64x64 over the sweep).
+  * Energy: HD-PV pays full-SAR on every Hadamard read; HARP is the
+    most energy-efficient in the high-noise regime (~65% of HD-PV at
+    32x32, ~67% of CW-SC at 64x64).
+"""
+
+from __future__ import annotations
+
+from repro.core import NoiseConfig, WVConfig, WVMethod, default_config_for_array
+
+from .common import emit, run_wv
+
+_METHODS = [WVMethod.CW_SC, WVMethod.HD_PV, WVMethod.HARP]
+_NOISES = (0.1, 0.4, 0.7)
+
+
+def main(n_cells: int = 32, n_columns: int = 384) -> dict:
+    res = {}
+    for sigma in _NOISES:
+        for m in _METHODS:
+            cfg = default_config_for_array(n_cells).replace(
+                method=m, noise=NoiseConfig(sigma_read_lsb=sigma)
+            )
+            r, us = run_wv(cfg, n_columns, seed=2)
+            res[(sigma, m.value)] = r
+            emit(
+                f"fig13.n{n_cells}.sigma{sigma:g}.{m.value}",
+                us,
+                f"lat_us={r['latency_us']:.1f} e_nj={r['energy_nj']:.1f} "
+                f"iters={r['iterations']:.1f}",
+            )
+    lo, hi = min(_NOISES), max(_NOISES)
+    # CW-SC latency blows up with noise; Hadamard methods grow modestly.
+    cw_growth = res[(hi, "cw_sc")]["latency_us"] / res[(lo, "cw_sc")]["latency_us"]
+    hd_growth = res[(hi, "hd_pv")]["latency_us"] / res[(lo, "hd_pv")]["latency_us"]
+    emit(f"fig13.n{n_cells}.latency_growth", 0.0,
+         f"cw_sc={cw_growth:.2f}x hd_pv={hd_growth:.2f}x")
+    assert cw_growth > hd_growth
+    # High-noise regime: CW-SC slowest, HARP lowest energy.
+    assert res[(hi, "cw_sc")]["latency_us"] > res[(hi, "hd_pv")]["latency_us"]
+    assert res[(hi, "harp")]["energy_nj"] < res[(hi, "hd_pv")]["energy_nj"]
+    assert res[(hi, "harp")]["energy_nj"] < res[(hi, "cw_sc")]["energy_nj"]
+    return res
+
+
+if __name__ == "__main__":
+    main(32)
+    main(64)

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: FWHT / fused WV step / ACiM VMM vs oracles.
+
+On CPU these time the *reference* path and validate the Pallas kernels
+in interpret mode (numbers are not TPU-representative; the roofline for
+the kernels comes from the dry-run HLO, not wall time here).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.acim_vmm import ops as vmm_ops, ref as vmm_ref
+from repro.kernels.fwht import ops as fwht_ops, ref as fwht_ref
+from repro.kernels.wv_step import ops as wv_ops, ref as wv_ref
+from repro.kernels.wv_step.ref import WVCellParams
+
+from .common import emit, timed
+
+
+def main() -> None:
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096, 32))
+    ref_fn = jax.jit(fwht_ref.fwht)
+    out_ref, us_ref = timed(ref_fn, x)
+    out_k = fwht_ops.fwht(x)
+    err = float(jnp.max(jnp.abs(out_k - out_ref)))
+    emit("kernels.fwht_ref", us_ref, f"C=4096 N=32 kernel_maxerr={err:.1e}")
+    assert err < 1e-3
+
+    C, N = 2048, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 8)
+    args = (
+        jax.random.normal(ks[0], (C, N)) * 8,
+        jnp.abs(jax.random.normal(ks[1], (C, N))),
+        jax.random.uniform(ks[2], (C, N), minval=0, maxval=7),
+        jax.random.randint(ks[3], (C, N), 0, 3),
+        jax.random.bernoulli(ks[4], 0.3, (C, N)),
+        1 + 0.15 * jax.random.normal(ks[5], (C, N)),
+        0.05 * jax.random.normal(ks[6], (C, N)),
+        1 + 0.1 * jax.random.normal(ks[7], (C, N)),
+    )
+    p = WVCellParams(4.0, 2, True, True, 0.25, 16.0, 7.0, 0.35, 0.85)
+    ref_fn = jax.jit(lambda *a: wv_ref.wv_cell_update(*a, p))
+    out_ref, us = timed(ref_fn, *args)
+    out_k = wv_ops.wv_cell_update(*args, p)
+    err = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(out_k, out_ref)
+    )
+    emit("kernels.wv_step_ref", us, f"C={C} N={N} kernel_maxerr={err:.1e}")
+    assert err < 1e-4
+
+    xb = jax.random.normal(jax.random.PRNGKey(2), (128, 32))
+    gp = jax.random.randint(jax.random.PRNGKey(3), (2, 32, 256), 0, 8).astype(jnp.float32)
+    gn = jax.random.randint(jax.random.PRNGKey(4), (2, 32, 256), 0, 8).astype(jnp.float32)
+    ref_fn = jax.jit(lambda x, p_, n_: vmm_ref.acim_vmm(x, p_, n_, 3, 9, 448.0))
+    out_ref, us = timed(ref_fn, xb, gp, gn)
+    out_k = vmm_ops.acim_vmm(xb, gp, gn, bc=3, adc_bits=9, full_scale=448.0)
+    err = float(jnp.max(jnp.abs(out_k - out_ref)))
+    emit("kernels.acim_vmm_ref", us, f"B=128 K=32 M=256 kernel_maxerr={err:.1e}")
+    assert err < 1e-2
+
+
+if __name__ == "__main__":
+    main()

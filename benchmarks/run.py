@@ -1,0 +1,35 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from . import (
+        fig9_convergence,
+        fig9c_common_mode,
+        fig10_robustness,
+        fig12_iso_footprint,
+        fig13_latency_energy,
+        table2_prior_work,
+        kernels_bench,
+    )
+
+    print("name,us_per_call,derived")
+    fig9_convergence.main(sweep_tau=True)
+    fig9_convergence.convergence_curves()
+    fig9_convergence.n_scaling()
+    fig9c_common_mode.main()
+    fig10_robustness.main()
+    fig10_robustness.main_fig11()
+    fig12_iso_footprint.main()
+    fig13_latency_energy.main(32)
+    fig13_latency_energy.main(64)
+    table2_prior_work.main()
+    kernels_bench.main()
+    print(f"benchmarks.total,{(time.time() - t0) * 1e6:.0f},all-passed")
+
+
+if __name__ == "__main__":
+    main()

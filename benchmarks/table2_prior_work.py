@@ -1,0 +1,38 @@
+"""Table 2: headline comparison, normalized against the CW-SC baseline.
+
+The paper reports HD-PV/HARP improvements normalized to CW-SC (itself
+stronger than cell-by-cell WV): energy 6.2x / 9.5x and latency 6.1x /
+3.5x refer to the MRA comparison (Fig. 12); this table reports the
+direct CW-SC-relative gains of the whole framework run.
+"""
+
+from __future__ import annotations
+
+from repro.core import WVConfig, WVMethod
+
+from .common import ALL_METHODS, emit, run_wv
+
+
+def main(n_columns: int = 512) -> dict:
+    res = {}
+    for m in ALL_METHODS:
+        r, _us = run_wv(WVConfig(method=m), n_columns, seed=5)
+        res[m.value] = r
+    base = res["cw_sc"]
+    for v in ("hd_pv", "harp", "mra"):
+        r = res[v]
+        emit(
+            f"table2.{v}_vs_cwsc",
+            0.0,
+            f"error={base['rms_weight'] / r['rms_weight']:.2f}x "
+            f"latency={base['latency_us'] / r['latency_us']:.2f}x "
+            f"energy={base['energy_nj'] / r['energy_nj']:.2f}x "
+            f"iters={base['iterations'] / r['iterations']:.2f}x",
+        )
+    assert res["hd_pv"]["rms_weight"] < base["rms_weight"]
+    assert res["harp"]["energy_nj"] < base["energy_nj"]
+    return res
+
+
+if __name__ == "__main__":
+    main()

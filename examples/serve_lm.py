@@ -1,0 +1,59 @@
+"""Batched serving demo: prefill + decode with the ServeEngine.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b
+
+Uses the smoke-size config of the chosen architecture (CPU-friendly),
+runs batched greedy generation, and reports tokens/s.  With --rram it
+first programs the weights onto simulated RRAM with HARP and serves the
+programmed model (the paper's iso-footprint deployment).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import WVConfig, WVMethod
+from repro.core.programmer import deploy_params
+from repro.models import init_params
+from repro.serving import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--rram", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.block == "rwkv6" or cfg.frontend == "embed_stub":
+        raise SystemExit("pick a token-input arch for this demo (dense/moe/hybrid)")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.rram:
+        print("programming weights onto RRAM with HARP ...")
+        params, report = deploy_params(
+            jax.random.PRNGKey(1), params, WVConfig(method=WVMethod.HARP)
+        )
+        print(f"  programmed {report.num_cells:,} cells, "
+              f"rms={report.rms_cell_error_lsb:.3f} LSB")
+
+    engine = ServeEngine(cfg, params)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(2), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    t0 = time.time()
+    out = engine.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    total = args.batch * args.max_new
+    print(f"arch={args.arch} (smoke config) batch={args.batch}")
+    print(f"generated {out.shape} in {dt:.2f}s ({total / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", out[0][:16].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+Design (single-process simulation of the multi-host protocol):
+
+* **Atomic**: arrays are written to `step_<n>.tmp/` and the directory is
+  renamed to `step_<n>/` only after the manifest fsyncs — a crashed save
+  can never shadow a good checkpoint.
+* **Async**: `CheckpointManager.save(..., blocking=False)` snapshots to
+  host memory (device_get) on the caller's thread — the only part that
+  must be consistent with the step — then serializes on a background
+  thread so training resumes immediately (the standard async-ckpt
+  overlap).
+* **Elastic**: leaves are saved *unsharded* (global view).  Restore
+  takes an optional `sharding_tree`; arrays are `device_put` with the
+  new sharding, so a checkpoint from a 16x16 mesh restores onto 2x16x16
+  (or a debug CPU mesh) unchanged — resharding is free at load time.
+* **Self-describing**: a JSON manifest stores the flattened key paths,
+  shapes and dtypes; restore can rebuild the pytree with or without a
+  template.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _to_savable(leaf) -> tuple[np.ndarray, str]:
+    """numpy cannot round-trip ml_dtypes (bf16/fp8) through .npy without
+    pickle; store such leaves widened to f32 and record the true dtype in
+    the manifest (restore casts back via the template or manifest)."""
+    arr = np.asarray(leaf)
+    orig = str(arr.dtype)
+    if arr.dtype.kind not in "biufc":  # custom dtypes (bfloat16, fp8, ...)
+        arr = arr.astype(np.float32)
+    return arr, orig
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Blocking atomic save; returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = {"step": step, "leaves": {}}
+    for i, (key, leaf) in enumerate(flat.items()):
+        fname = f"leaf_{i:05d}.npy"
+        arr, orig_dtype = _to_savable(leaf)
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": orig_dtype,
+        }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, _MANIFEST)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int | None = None,
+    template: Any = None,
+    sharding_tree: Any = None,
+) -> tuple[int, Any]:
+    """Restore (step, tree).  With a template, the pytree structure and
+    leaf order come from it (robust to key-order drift); otherwise a flat
+    {path: array} dict is returned.  `sharding_tree` (same structure as
+    template) device_puts each leaf with the target sharding — elastic
+    across mesh shapes."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    def _load(info):
+        arr = np.load(os.path.join(path, info["file"]))
+        if str(arr.dtype) != info["dtype"]:
+            try:  # cast widened ml_dtypes leaves back (bf16 etc.)
+                import ml_dtypes  # noqa: F401
+
+                arr = arr.astype(np.dtype(info["dtype"]))
+            except (TypeError, ImportError):
+                pass  # template-based restore casts below
+        return arr
+
+    loaded = {key: _load(info) for key, info in manifest["leaves"].items()}
+    if template is None:
+        return step, loaded
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = jax.tree_util.keystr(p)
+        if key not in loaded:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = loaded[key].astype(leaf.dtype) if hasattr(leaf, "dtype") else loaded[key]
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if sharding_tree is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else jax.numpy.asarray(x),
+            tree,
+            sharding_tree,
+            is_leaf=lambda x: x is None,
+        )
+    return step, tree
+
+
+class CheckpointManager:
+    """Keep-k rotation + async background saves + failure-safe restore."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        # Snapshot on the caller thread (consistency point), serialize later.
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+
+    def restore_latest(self, template: Any = None, sharding_tree: Any = None):
+        self.wait()
+        return restore_checkpoint(
+            self.directory, None, template=template, sharding_tree=sharding_tree
+        )

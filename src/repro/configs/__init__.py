@@ -1,0 +1,10 @@
+from .registry import (  # noqa: F401
+    ARCHS,
+    SHAPES,
+    ShapeSpec,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    materialize_inputs,
+    runnable_cells,
+)

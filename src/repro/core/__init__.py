@@ -1,0 +1,13 @@
+# The paper's primary contribution: Hadamard-domain write-and-verify for
+# RRAM programming (HD-PV + HARP), as a composable JAX library.
+from .types import (  # noqa: F401
+    ADCConfig,
+    DeviceConfig,
+    NoiseConfig,
+    WVConfig,
+    WVMethod,
+    default_config_for_array,
+)
+from .cost import CircuitCost  # noqa: F401
+from .wv import WVStats, program_columns, verify_sweep  # noqa: F401
+from . import hadamard  # noqa: F401

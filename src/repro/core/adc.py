@@ -1,0 +1,76 @@
+"""Column TIA + SAR ADC behaviour: full conversion vs compare-only mode.
+
+Paper Fig. 7: a standard n-bit SAR ADC either
+
+* runs the full n-step binary search ("SAR logic"), producing a digital
+  code — modelled as uniform quantization over the column's full-scale
+  range; or
+* is put in HARP's one-shot *compare* mode ("compare logic"): the
+  capacitor array is preset to the target code and the comparator makes
+  one (or two) decisions, yielding ternary {Low, Equal, High} — no code.
+
+Full-scale convention (Sec. 3.2, V_sam reference switching):
+the ADC always spans `N * (2^Bc - 1)` cell-LSB of column current.
+* one-hot reads / first Hadamard row: range [0, FS]          (V_sam = GND)
+* balanced Hadamard rows:            range [-FS/2, +FS/2]    (V_sam = Vcm/2)
+Both use the same bit budget, so the ADC code width in cell-LSB is
+FS / 2^bits regardless of mode — single-cell (one-hot) SAR reads therefore
+use only 1/N of the converter's dynamic range, one of the structural
+advantages of reading in the Hadamard basis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import ADCConfig
+
+__all__ = ["full_scale_lsb", "code_width_lsb", "sar_read", "compare_read"]
+
+
+def full_scale_lsb(n_cells: int, levels: int) -> float:
+    return float(n_cells * (levels - 1))
+
+
+def code_width_lsb(adc: ADCConfig, n_cells: int, levels: int) -> float:
+    return full_scale_lsb(n_cells, levels) / float(1 << adc.bits)
+
+
+def sar_read(
+    y: jax.Array, adc: ADCConfig, n_cells: int, levels: int, centered: bool
+) -> jax.Array:
+    """Full SAR conversion: quantize analog y (cell-LSB) to the ADC grid.
+
+    `centered` selects the balanced-row range [-FS/2, FS/2]; otherwise
+    [0, FS].  Returns the *dequantized* value in cell-LSB (code * width),
+    saturating at the rails.
+    """
+    fs = full_scale_lsb(n_cells, levels)
+    w = code_width_lsb(adc, n_cells, levels)
+    lo = -fs / 2.0 if centered else 0.0
+    hi = lo + fs
+    code = jnp.round((jnp.clip(y, lo, hi) - lo) / w)
+    code = jnp.clip(code, 0, (1 << adc.bits) - 1)
+    return lo + code * w
+
+
+def compare_read(
+    y: jax.Array, target: jax.Array, deadzone_lsb: float
+) -> tuple[jax.Array, jax.Array]:
+    """One-shot compare mode (eq. 9): ternary sign of (y - target).
+
+    The comparator presets the capacitor array to the target code and
+    compares; a second comparison against the adjacent code resolves the
+    'Equal' band.  Returns (sign in {-1, 0, +1}, comparisons in {1, 2}).
+
+    Comparison counting follows Fig. 7(c): the first comparison resolves
+    "below target"; only a not-below outcome needs the second comparison
+    against target+1 to separate Equal from High.
+    """
+    diff = y - target
+    below = diff < -deadzone_lsb
+    above = diff > deadzone_lsb
+    sign = jnp.where(below, -1.0, jnp.where(above, 1.0, 0.0))
+    n_cmp = jnp.where(below, 1, 2).astype(jnp.int32)
+    return sign, n_cmp

@@ -1,0 +1,104 @@
+"""RRAM device model: nonlinear, asymmetric, stochastic conductance updates.
+
+Implements the programming physics of paper Sec. 2.2 / Fig. 3:
+
+* SET increases conductance, RESET decreases it.
+* The effective per-pulse step tapers near the rails (nonlinear switching):
+  SET is weak near LRS (g -> g_max), RESET weak near HRS (g -> 0).
+* Asymmetry: RESET transitions are weaker than SET by a fixed factor.
+* D2D: a static per-cell step-efficiency drawn once per cell.
+* C2C: multiplicative jitter per write event.
+* Mapping noise (eq. 1): additive Gaussian per write event with
+  sigma_map = 0.10 * G_max, then clip to [0 (HRS), G_max (LRS)].
+
+All quantities are in cell-LSB units (see core.types).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import DeviceConfig
+
+__all__ = ["sample_d2d", "apply_pulses", "initial_state"]
+
+
+def sample_d2d(key: jax.Array, shape, dev: DeviceConfig) -> jax.Array:
+    """Static device-to-device step-efficiency multiplier per cell."""
+    return 1.0 + dev.sigma_d2d_frac * jax.random.normal(key, shape, jnp.float32)
+
+
+def initial_state(shape) -> jax.Array:
+    """All cells start at HRS (zero conductance) before coarse SET."""
+    return jnp.zeros(shape, jnp.float32)
+
+
+def _effective_step(
+    g: jax.Array, direction: jax.Array, dev: DeviceConfig, step_lsb: float
+) -> jax.Array:
+    """Direction-dependent nominal step at conductance g (Fig. 3 shape).
+
+    direction: +1 (SET, conductance up), -1 (RESET, down), 0 (no pulse).
+    """
+    gmax = dev.g_max_lsb
+    frac = jnp.clip(g / gmax, 0.0, 1.0)
+    # Taper: SET slows approaching LRS, RESET slows approaching HRS.
+    set_eff = (1.0 - frac) ** dev.nonlinearity
+    reset_eff = frac**dev.nonlinearity * dev.reset_asymmetry
+    eff = jnp.where(direction > 0, set_eff, reset_eff)
+    return step_lsb * eff
+
+
+def apply_pulses(
+    key: jax.Array,
+    g: jax.Array,
+    direction: jax.Array,
+    n_pulses: jax.Array,
+    d2d: jax.Array,
+    dev: DeviceConfig,
+    step_lsb: float | None = None,
+    noise_scale: float = 1.0,
+) -> jax.Array:
+    """Apply a burst of identical pulses to every cell (vectorized write phase).
+
+    Args:
+      key: PRNG key for this write event.
+      g: (..., N) current conductances in LSB.
+      direction: (..., N) in {-1, 0, +1}.
+      n_pulses: (..., N) integer pulse counts (0 = skip; frozen cells pass 0).
+      d2d: (..., N) static per-cell efficiency from :func:`sample_d2d`.
+      dev: device config.
+      step_lsb: nominal step per pulse (defaults to the fine step).
+      noise_scale: multiplier on sigma_map (coarse pulses are noisier).
+
+    Returns updated conductances, clipped to [0, G_max].
+    """
+    if step_lsb is None:
+        step_lsb = dev.fine_step_lsb
+    k_c2c, k_map = jax.random.split(key)
+    n = n_pulses.astype(jnp.float32)
+    pulsed = n > 0
+    step = _effective_step(g, direction, dev, step_lsb) * d2d
+    c2c = 1.0 + dev.sigma_c2c_frac * jax.random.normal(k_c2c, g.shape, jnp.float32)
+    delta = direction.astype(jnp.float32) * step * n * c2c
+    # eq. (1): additive mapping noise. "event" mode draws sigma_map once per
+    # write event; "pulse" mode draws per-pulse noise proportional to the
+    # step size (a random walk over the burst), normalized so a full-swing
+    # coarse write realizes ~sigma_map total, matching the one-shot
+    # characterization of eq. (1).
+    if dev.map_noise_mode == "pulse":
+        # Normalize so a full-swing coarse write (g_max/coarse_step pulses)
+        # accumulates ~sigma_map total: sigma_p = sigma_map / sqrt(n_swing),
+        # scaled linearly with the step size for other pulse classes.
+        n_swing = dev.g_max_lsb / dev.coarse_step_lsb
+        sigma_p = (
+            dev.sigma_map_lsb / jnp.sqrt(n_swing) * (step_lsb / dev.coarse_step_lsb)
+        )
+        sigma = sigma_p * jnp.sqrt(jnp.maximum(n, 1.0))
+    else:
+        sigma = dev.sigma_map_lsb
+    n_map = sigma * noise_scale * jax.random.normal(k_map, g.shape, jnp.float32)
+    g_new = g + delta + jnp.where(pulsed, n_map, 0.0)
+    g_new = jnp.clip(g_new, 0.0, dev.g_max_lsb)
+    return jnp.where(pulsed, g_new, g)

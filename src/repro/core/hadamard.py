@@ -1,0 +1,113 @@
+"""Hadamard read-basis construction and fast Walsh-Hadamard transforms.
+
+This module implements the measurement-basis machinery of the paper:
+
+* Sylvester-Hadamard matrices ``H_N`` with entries in {-1, +1} and
+  ``H^T H = N I`` (Prop. 2.1 optimality over +-1 read matrices).
+* Forward encode ``y = H @ w``  — the *analog* column read, simulated.
+* Inverse decode ``x = (1/N) H^T y`` — the *digital* periphery step.
+* ``fwht``: the O(N log N) fast Walsh-Hadamard butterfly used by both
+  (Sylvester H is symmetric, so encode and unnormalized decode are the
+  same transform).  The Pallas TPU kernel in ``repro.kernels.fwht``
+  implements the identical butterfly; this file is the pure-jnp oracle
+  used across the WV engine and as the kernel reference.
+
+Shapes follow the WV engine convention: the *last* axis is the N-cell
+column axis; any leading axes are batch (columns, slices, ...).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "hadamard_matrix",
+    "is_hadamard",
+    "fwht",
+    "encode",
+    "decode",
+    "decode_unnormalized",
+]
+
+
+@functools.lru_cache(maxsize=None)
+def _hadamard_np(n: int) -> np.ndarray:
+    """Sylvester construction of the n x n Hadamard matrix (n a power of 2)."""
+    if n < 1 or (n & (n - 1)) != 0:
+        raise ValueError(f"Sylvester-Hadamard order must be a power of 2, got {n}")
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """The N x N Sylvester-Hadamard read matrix (rows are read patterns).
+
+    Row 0 is the all +1 pattern (the only unbalanced row: it alone
+    carries the common-mode offset after decoding, eq. (7)).
+    """
+    return jnp.asarray(_hadamard_np(n), dtype=dtype)
+
+
+def is_hadamard(a: np.ndarray) -> bool:
+    """Check A in {-1,+1}^{NxN} with A^T A = N I (the Prop. 2.1 bound)."""
+    a = np.asarray(a)
+    n = a.shape[0]
+    if a.shape != (n, n) or not np.all(np.isin(a, (-1.0, 1.0))):
+        return False
+    return np.array_equal(a.T @ a, n * np.eye(n))
+
+
+def fwht(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Fast Walsh-Hadamard transform along ``axis`` (unnormalized).
+
+    ``fwht(x) == x @ H_N`` for the Sylvester ``H_N`` (which is symmetric,
+    so this also equals ``H_N @ x`` along that axis).  log2(N) butterfly
+    stages, each a reshape + paired add/sub — this is the exact dataflow
+    the Pallas kernel implements stage-by-stage in VMEM.
+    """
+    axis = axis % x.ndim
+    if axis != x.ndim - 1:
+        x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"FWHT length must be a power of 2, got {n}")
+    shape = x.shape
+    stages = n.bit_length() - 1
+    # Butterfly: at stage s, pair elements h = 2^s apart.
+    for s in range(stages):
+        h = 1 << s
+        y = x.reshape(shape[:-1] + (n // (2 * h), 2, h))
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1).reshape(shape)
+    if axis != x.ndim - 1:
+        x = jnp.moveaxis(x, -1, axis)
+    return x
+
+
+def encode(w: jax.Array, axis: int = -1) -> jax.Array:
+    """Analog Hadamard column read (noiseless part): y = H w.
+
+    ``w``: (..., N) cell conductances in LSB units.  Returns (..., N)
+    Hadamard-domain measurements.  Row i of H is the i-th read pattern
+    (+-1 BL drive of Fig. 6(a)).
+    """
+    return fwht(w, axis=axis)
+
+
+def decode_unnormalized(y: jax.Array, axis: int = -1) -> jax.Array:
+    """H^T y without the 1/N — used by HARP's ternary aggregation (eq. 10
+    with the threshold tau_w applied to the unnormalized sum)."""
+    return fwht(y, axis=axis)
+
+
+def decode(y: jax.Array, axis: int = -1) -> jax.Array:
+    """Inverse Hadamard decode: x = (1/N) H^T y (eq. 6)."""
+    n = y.shape[axis % y.ndim]
+    return fwht(y, axis=axis) / n

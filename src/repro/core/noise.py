@@ -1,0 +1,48 @@
+"""Verify-read noise model (paper eqs. 2-4).
+
+For one verification sweep of a column read with patterns a_1..a_N:
+
+    y_hat_i = a_i^T w  +  n_uc,i  +  mu_cm
+
+* n_uc,i ~ N(0, sigma_uc^2) i.i.d. per measurement (TIA/ADC thermal noise) —
+  independent across patterns AND across repeated reads (so multi-read
+  averaging does average it down).
+* mu_cm ~ N(0, sigma_cm^2) per column per sweep — constant across all N
+  patterns of that sweep (shared TIA/ADC offset, reference drift, IR drop),
+  independent across columns.  Because it is constant within the sweep,
+  multi-read averaging does NOT remove it, while Hadamard decoding cancels
+  it exactly for the N-1 balanced rows (eq. 7).
+
+Units: cell-LSB throughout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import NoiseConfig
+
+__all__ = ["sample_sweep_noise"]
+
+
+def sample_sweep_noise(
+    key: jax.Array,
+    batch_shape: tuple[int, ...],
+    n_meas: int,
+    noise: NoiseConfig,
+) -> jax.Array:
+    """Noise for one verification sweep.
+
+    Returns array of shape (*batch_shape, n_meas): i.i.d. uncorrelated
+    noise plus a per-column common-mode offset broadcast across the
+    measurement axis.
+    """
+    k_uc, k_cm = jax.random.split(key)
+    n_uc = noise.sigma_uc_lsb * jax.random.normal(
+        k_uc, (*batch_shape, n_meas), jnp.float32
+    )
+    mu_cm = noise.sigma_cm_lsb * jax.random.normal(
+        k_cm, (*batch_shape, 1), jnp.float32
+    )
+    return n_uc + mu_cm

@@ -1,0 +1,142 @@
+"""Model-level RRAM deployment: quantize -> slice -> program -> read back.
+
+This is the integration point between the paper's WV technique and the
+training/serving framework: `deploy_params` takes any pytree of model
+parameters, pushes every matmul weight through the
+quantize -> bit-slice -> pack-to-columns -> write-and-verify pipeline,
+and returns the *programmed* parameters (with real programming error)
+plus aggregate WV statistics (latency / energy / iterations), so a
+trained checkpoint can be "burned" onto simulated RRAM with CW-SC, MRA,
+HD-PV, or HARP and then served to measure end-task robustness.
+
+Deployment policy (documented in DESIGN.md):
+* >=2D weight leaves go to RRAM (flattened to (K, M) on the last axis);
+* 1D leaves (norm scales, biases) stay digital — they are tiny and in
+  real ACiM macros live in SRAM next to the shift-and-add periphery;
+* embedding tables are RRAM-deployable but excluded by default
+  (`deploy_embeddings=False`): token embedding lookups are row reads,
+  not VMM columns.
+
+Columns are independent; under jit the caller may shard the column axis
+over the full mesh (launch/program.py does this for the dry-run mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import (
+    QuantConfig,
+    dequantize_weight,
+    pack_columns,
+    quantize_weight,
+    unpack_columns,
+)
+
+from .cost import CircuitCost
+from .types import WVConfig
+from .wv import WVStats, program_columns
+
+__all__ = ["DeployReport", "deploy_params", "deploy_matrix"]
+
+
+@dataclasses.dataclass
+class DeployReport:
+    """Aggregate WV statistics for one deployment."""
+
+    num_columns: int = 0
+    num_cells: int = 0
+    mean_iterations: float = 0.0
+    total_latency_ns: float = 0.0     # sum over arrays (columns in parallel)
+    critical_latency_ns: float = 0.0  # max over columns = array wall-time
+    total_energy_pj: float = 0.0
+    rms_cell_error_lsb: float = 0.0
+    leaves: dict[str, dict[str, float]] = dataclasses.field(default_factory=dict)
+
+    def merge(self, name: str, stats: WVStats, n_cells: int) -> None:
+        c = int(stats.iterations.shape[0])
+        lat = float(jnp.sum(stats.latency_ns))
+        crit = float(jnp.max(stats.latency_ns))
+        en = float(jnp.sum(stats.energy_pj))
+        it = float(jnp.mean(stats.iterations))
+        rms = float(jnp.sqrt(jnp.mean(stats.rms_error_lsb**2)))
+        self.leaves[name] = dict(
+            columns=c, mean_iterations=it, critical_latency_ns=crit,
+            energy_pj=en, rms_cell_error_lsb=rms,
+        )
+        tot_cells = self.num_cells + c * n_cells
+        w_old = self.num_cells / max(tot_cells, 1)
+        self.rms_cell_error_lsb = float(
+            (self.rms_cell_error_lsb**2 * w_old + rms**2 * (1 - w_old)) ** 0.5
+        )
+        self.mean_iterations = (
+            self.mean_iterations * self.num_columns + it * c
+        ) / max(self.num_columns + c, 1)
+        self.num_columns += c
+        self.num_cells = tot_cells
+        self.total_latency_ns += lat
+        self.critical_latency_ns = max(self.critical_latency_ns, crit)
+        self.total_energy_pj += en
+
+
+def deploy_matrix(
+    key: jax.Array,
+    w: jax.Array,
+    wv_cfg: WVConfig,
+    q_cfg: QuantConfig | None = None,
+    cost: CircuitCost | None = None,
+) -> tuple[jax.Array, WVStats]:
+    """Program one weight matrix onto RRAM; returns (w_programmed, stats)."""
+    if q_cfg is None:
+        q_cfg = QuantConfig(
+            weight_bits=wv_cfg.weight_bits, cell_bits=wv_cfg.device.bc
+        )
+    shape = w.shape
+    w2 = w.reshape((-1, shape[-1]))
+    q, scale = quantize_weight(w2, q_cfg)
+    cols, layout = pack_columns(q, wv_cfg.n_cells, q_cfg.cell_bits, q_cfg.slices)
+    g, stats = program_columns(key, cols, wv_cfg, cost=cost)
+    q_prog = unpack_columns(g, layout)  # analog effective levels
+    w_prog = dequantize_weight(q_prog, scale).reshape(shape)
+    return w_prog, stats
+
+
+def deploy_params(
+    key: jax.Array,
+    params: Any,
+    wv_cfg: WVConfig,
+    q_cfg: QuantConfig | None = None,
+    cost: CircuitCost | None = None,
+    *,
+    deploy_embeddings: bool = False,
+    predicate: Callable[[str, jax.Array], bool] | None = None,
+) -> tuple[Any, DeployReport]:
+    """Program every eligible weight leaf of a parameter pytree.
+
+    Returns (programmed_params, DeployReport).  Eligibility: ndim >= 2,
+    plus the optional `predicate(path, leaf)`; embedding-like leaves
+    (path contains 'embed') follow `deploy_embeddings`.
+    """
+    report = DeployReport()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        name = jax.tree_util.keystr(path)
+        eligible = hasattr(leaf, "ndim") and leaf.ndim >= 2
+        if eligible and not deploy_embeddings and "embed" in name.lower():
+            eligible = False
+        if eligible and predicate is not None:
+            eligible = predicate(name, leaf)
+        if not eligible:
+            out.append(leaf)
+            continue
+        w_prog, stats = deploy_matrix(
+            jax.random.fold_in(key, i), leaf, wv_cfg, q_cfg, cost
+        )
+        report.merge(name, stats, wv_cfg.n_cells)
+        out.append(w_prog.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), report

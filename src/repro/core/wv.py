@@ -1,0 +1,318 @@
+"""Column-wise write-and-verify engine (paper Secs. 3-4).
+
+Implements all four WV schemes behind one vectorized loop:
+
+  CW-SC  - column-wise single-cell baseline: one-hot verify reads with the
+           compare-only ADC mode (ternary decision per cell, 1 fine
+           pulse/iteration).  The paper's primary baseline.
+  MRA-M  - multi-read averaging: M full-SAR one-hot reads per cell,
+           averaged; magnitude estimate -> multi-pulse update.
+  HD-PV  - Hadamard-encoded parallel verify: N Hadamard reads, full SAR,
+           inverse-Hadamard (FWHT) decode; magnitude -> multi-pulse update.
+  HARP   - Hadamard reads, compare-only vs the Hadamard-domain target
+           (eq. 9), ternary aggregate s_w = H^T s_y (eq. 10), threshold
+           tau_w (eq. 11); 1 fine pulse/iteration.
+
+The engine runs ONE `lax.while_loop` over WV iterations for an arbitrary
+batch of columns simultaneously, with per-cell freeze masks (streak
+counter, Sec. 3.1) and per-column active masks — the idiomatic way to
+batch heterogeneous convergence on SPMD hardware (no vmap-of-while).
+
+Physical modelling notes:
+* Verify reads always sense the WHOLE column (frozen cells keep
+  contributing current); frozen cells merely ignore their decisions.
+* mu_cm is redrawn per column per sweep and shared by every measurement
+  in that sweep (incl. all M reads of MRA) — see core.noise.
+* Compare-mode targets are first quantized onto the ADC code grid (the
+  comparator's DAC can only produce code levels).
+* Costs follow core.cost; per-column latency/energy accumulate only while
+  the column is still active.
+
+Shapes: targets (C, N) float32 integer levels; returns g (C, N) and a
+`WVStats` pytree of per-column diagnostics.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import adc as adc_mod
+from . import device as dev_mod
+from . import hadamard as hd
+from . import noise as noise_mod
+from .cost import CircuitCost, read_phase_cost, write_phase_cost
+from .types import WVConfig, WVMethod
+
+__all__ = ["WVStats", "program_columns", "verify_sweep"]
+
+
+class WVStats(NamedTuple):
+    """Per-column WV diagnostics (all shape (C,))."""
+
+    iterations: jax.Array      # fine WV sweeps executed while column active
+    latency_ns: jax.Array      # verify + write critical-path latency
+    energy_pj: jax.Array       # verify + write + decode energy
+    reads: jax.Array           # ADC conversions / comparisons issued
+    write_pulses: jax.Array    # total write pulses applied
+    rms_error_lsb: jax.Array   # final per-column RMS |g - w*|
+    frozen_frac: jax.Array     # fraction of cells frozen at termination
+
+
+def _fwht(x: jax.Array, cfg: WVConfig) -> jax.Array:
+    if cfg.use_pallas:
+        from repro.kernels.fwht import ops as fwht_ops
+
+        return fwht_ops.fwht(x)
+    return hd.fwht(x)
+
+
+def verify_sweep(
+    key: jax.Array, g: jax.Array, targets: jax.Array, cfg: WVConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One verification sweep for a batch of columns.
+
+    Returns:
+      decision: (C, N) in {-1, 0, +1} = sign of estimated (g - w*) beyond
+        the threshold; +1 means conductance too HIGH (needs RESET).
+      dev_mag:  (C, N) |deviation| estimate in LSB for magnitude methods
+        (pulse sizing); 1.0 placeholder for ternary methods.
+      n_compares: (C, N) comparator operations (compare modes) else zeros.
+    """
+    dev_cfg, noise_cfg, a = cfg.device, cfg.noise, cfg.adc
+    n, levels = cfg.n_cells, cfg.device.levels
+    thr = cfg.decision_threshold_lsb
+    c = g.shape[0]
+
+    if cfg.method == WVMethod.CW_SC:
+        nz = noise_mod.sample_sweep_noise(key, (c,), n, noise_cfg)
+        y = g + nz
+        t_grid = adc_mod.sar_read(targets, a, n, levels, centered=False)
+        sign, n_cmp = adc_mod.compare_read(y, t_grid, thr)
+        return sign, jnp.ones_like(g), n_cmp
+
+    if cfg.method == WVMethod.MRA:
+        m = cfg.mra_reads
+        k_uc, k_cm = jax.random.split(key)
+        n_uc = noise_cfg.sigma_uc_lsb * jax.random.normal(k_uc, (c, m, n))
+        mu_cm = noise_cfg.sigma_cm_lsb * jax.random.normal(k_cm, (c, 1, 1))
+        reads = adc_mod.sar_read(
+            g[:, None, :] + n_uc + mu_cm, a, n, levels, centered=False
+        )
+        w_hat = jnp.mean(reads, axis=1)
+        dev = w_hat - targets
+        sign = jnp.where(dev > thr, 1.0, jnp.where(dev < -thr, -1.0, 0.0))
+        return sign, jnp.abs(dev), jnp.zeros_like(g)
+
+    # Hadamard-domain methods: physical read is y = H g + noise.
+    y_true = _fwht(g, cfg)
+    nz = noise_mod.sample_sweep_noise(key, (c,), n, noise_cfg)
+    y = y_true + nz
+    centered = jnp.arange(n) > 0  # row 0 = all-ones (V_sam = GND range)
+
+    if cfg.method == WVMethod.HD_PV:
+        y_q = jnp.where(
+            centered,
+            adc_mod.sar_read(y, a, n, levels, centered=True),
+            adc_mod.sar_read(y, a, n, levels, centered=False),
+        )
+        w_hat = _fwht(y_q, cfg) / n  # inverse decode (eq. 6), digital adders
+        dev = w_hat - targets
+        sign = jnp.where(dev > thr, 1.0, jnp.where(dev < -thr, -1.0, 0.0))
+        return sign, jnp.abs(dev), jnp.zeros_like(g)
+
+    if cfg.method == WVMethod.HARP:
+        y_star = _fwht(targets, cfg)
+        y_star_grid = jnp.where(
+            centered,
+            adc_mod.sar_read(y_star, a, n, levels, centered=True),
+            adc_mod.sar_read(y_star, a, n, levels, centered=False),
+        )
+        s_y, n_cmp = adc_mod.compare_read(y, y_star_grid, thr)
+        s_w = _fwht(s_y, cfg)  # unnormalized H^T s_y (eq. 10)
+        sign = jnp.where(
+            s_w > cfg.tau_w, 1.0, jnp.where(s_w < -cfg.tau_w, -1.0, 0.0)
+        )
+        return sign, jnp.ones_like(g), n_cmp
+
+    raise ValueError(cfg.method)
+
+
+def _characterized_coarse_pulses(
+    targets: jax.Array, dev_cfg, max_pulses: int
+) -> jax.Array:
+    """Coarse pulse counts from the characterized (nominal) device response.
+
+    Real WV controllers derive open-loop pulse counts from the device's
+    programming look-up table (NeuroSim-style cumulative SET curve), not
+    from target/step — otherwise the nonlinear taper near LRS leaves a
+    large systematic undershoot at high levels.  We simulate the noiseless
+    cumulative response and take, per cell, the pulse count whose nominal
+    landing point is nearest the target.
+    """
+    from .device import _effective_step
+
+    def body(carry, _):
+        g_nom = carry
+        g_next = jnp.clip(
+            g_nom
+            + _effective_step(
+                g_nom, jnp.ones_like(g_nom), dev_cfg, dev_cfg.coarse_step_lsb
+            ),
+            0.0,
+            dev_cfg.g_max_lsb,
+        )
+        return g_next, g_next
+
+    g0 = jnp.zeros_like(targets)
+    _, traj = jax.lax.scan(body, g0, None, length=max_pulses)
+    # traj: (max_pulses, ...) nominal conductance after p+1 pulses.
+    landings = jnp.concatenate([g0[None], traj], axis=0)  # (P+1, ...)
+    err = jnp.abs(landings - targets[None])
+    return jnp.argmin(err, axis=0).astype(jnp.float32)
+
+
+class _LoopState(NamedTuple):
+    g: jax.Array
+    streak: jax.Array
+    frozen: jax.Array
+    it: jax.Array
+    iters: jax.Array
+    lat: jax.Array
+    en: jax.Array
+    reads: jax.Array
+    pulses: jax.Array
+
+
+def program_columns(
+    key: jax.Array,
+    targets: jax.Array,
+    cfg: WVConfig,
+    cost: CircuitCost | None = None,
+    d2d: jax.Array | None = None,
+) -> tuple[jax.Array, WVStats]:
+    """Program a batch of columns from HRS to integer target levels.
+
+    Args:
+      key: PRNG key.
+      targets: (C, N) float32 target levels in [0, 2^Bc - 1].
+      cfg: WV configuration (method, noise, ADC, device).
+      cost: circuit cost constants (Table 1 defaults if None).
+      d2d: optional pre-sampled (C, N) device-to-device efficiency.
+
+    Returns (g_final, WVStats).
+    """
+    if cost is None:
+        cost = CircuitCost()
+    targets = targets.astype(jnp.float32)
+    c, n = targets.shape
+    assert n == cfg.n_cells, (n, cfg.n_cells)
+    dev_cfg = cfg.device
+
+    k_d2d, k_coarse, k_loop = jax.random.split(key, 3)
+    if d2d is None:
+        d2d = dev_mod.sample_d2d(k_d2d, targets.shape, dev_cfg)
+
+    # ---- coarse OPEN-LOOP SET from HRS (Table 1: 4V, 5 steps/pulse, up to
+    # max_coarse_iters pulses).  Fig. 8 shows coarse SET as a distinct
+    # initialization before the WV loop: pulse counts come from the target
+    # (no verify reads — coarse pays write cost only).  Per-pulse noise
+    # accumulates as a random walk (device.map_noise_mode="pulse"), so the
+    # residual entering the fine loop is ~ +-coarse_step/2 quantization plus
+    # ~sigma_map of accumulated programming noise — the working point at
+    # which HARP's tau_w=4 corresponds to the 0.5-LSB cell threshold.
+    g = dev_mod.initial_state(targets.shape)
+    n_coarse = _characterized_coarse_pulses(targets, dev_cfg, cfg.max_coarse_iters)
+    direction0 = jnp.where(n_coarse > 0, 1.0, 0.0)
+    g = dev_mod.apply_pulses(
+        k_coarse, g, direction0, n_coarse, d2d, dev_cfg,
+        step_lsb=dev_cfg.coarse_step_lsb,
+    )
+    lat0, en0 = write_phase_cost(g, n_coarse, direction0, dev_cfg, cost, coarse=True)
+    pulses0 = jnp.sum(n_coarse, axis=-1)
+
+    ternary = cfg.method in (WVMethod.CW_SC, WVMethod.HARP)
+    reads_per_sweep = (
+        cfg.mra_reads * n if cfg.method == WVMethod.MRA else n
+    )
+
+    def body(st: _LoopState) -> _LoopState:
+        k_it = jax.random.fold_in(k_loop, st.it)
+        k_v, k_w = jax.random.split(k_it)
+        col_active = ~jnp.all(st.frozen, axis=-1)  # (C,)
+
+        decision, dev_mag, n_cmp = verify_sweep(k_v, st.g, targets, cfg)
+        # Streak / freeze (Sec. 3.1): K consecutive in-threshold verifies.
+        in_thr = decision == 0.0
+        streak = jnp.where(in_thr, st.streak + 1, 0)
+        # K consecutive within-threshold verifies freeze a cell (Sec. 3.1),
+        # gated behind the warmup (streaks don't bite during the coarse-
+        # residual transient; see types.WVConfig.freeze_warmup_iters).
+        warmup = cfg.freeze_warmup_iters + (
+            cfg.freeze_warmup_ternary_extra if ternary else 0
+        )
+        can_freeze = st.it >= warmup
+        frozen = st.frozen | (can_freeze & (streak >= cfg.k_streak))
+
+        # Pulse sizing: ternary methods use single fine pulses; magnitude
+        # methods apply round(|dev| / step) pulses (capped).
+        if ternary:
+            n_p = jnp.ones_like(st.g)
+        else:
+            n_p = jnp.clip(
+                jnp.round(dev_mag / dev_cfg.fine_step_lsb),
+                1.0,
+                float(cfg.max_pulses_per_iter),
+            )
+        act_cell = (~st.frozen) & (decision != 0.0) & col_active[:, None]
+        n_p = jnp.where(act_cell, n_p, 0.0)
+        direction = jnp.where(act_cell, -decision, 0.0)  # too high -> RESET
+
+        g_new = dev_mod.apply_pulses(k_w, st.g, direction, n_p, d2d, dev_cfg)
+
+        # Cost accounting (active columns only).
+        lat_r, en_r = read_phase_cost(cfg, cost, n_compares=n_cmp if ternary else None)
+        lat_w, en_w = write_phase_cost(st.g, n_p, direction, dev_cfg, cost)
+        actf = col_active.astype(jnp.float32)
+        return _LoopState(
+            g=jnp.where(col_active[:, None], g_new, st.g),
+            streak=streak,
+            frozen=frozen,
+            it=st.it + 1,
+            iters=st.iters + actf,
+            lat=st.lat + actf * (lat_r + lat_w),
+            en=st.en + actf * (en_r + en_w),
+            reads=st.reads + actf * reads_per_sweep,
+            pulses=st.pulses + jnp.sum(n_p, axis=-1),
+        )
+
+    def cond(st: _LoopState) -> jax.Array:
+        return (st.it < cfg.max_fine_iters) & jnp.any(~st.frozen)
+
+    zero = jnp.zeros((c,), jnp.float32)
+    init = _LoopState(
+        g=g,
+        streak=jnp.zeros(targets.shape, jnp.int32),
+        frozen=jnp.zeros(targets.shape, bool),
+        it=jnp.asarray(0, jnp.int32),
+        iters=zero,
+        lat=lat0,
+        en=en0,
+        reads=zero,
+        pulses=pulses0,
+    )
+    st = jax.lax.while_loop(cond, body, init)
+
+    err = st.g - targets
+    stats = WVStats(
+        iterations=st.iters,
+        latency_ns=st.lat,
+        energy_pj=st.en,
+        reads=st.reads,
+        write_pulses=st.pulses,
+        rms_error_lsb=jnp.sqrt(jnp.mean(err * err, axis=-1)),
+        frozen_frac=jnp.mean(st.frozen.astype(jnp.float32), axis=-1),
+    )
+    return st.g, stats

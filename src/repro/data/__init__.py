@@ -1,0 +1,1 @@
+from .synthetic import SyntheticLM, Batch  # noqa: F401

@@ -1,0 +1,52 @@
+"""Name-based parameter sharding rules (logical -> mesh axes).
+
+Rules map parameter path patterns to PartitionSpecs.  Conventions (see
+DESIGN.md Sec. 4):
+
+* 2D weights: FSDP on the *input* dim over "data", TP on the *output*
+  dim over "model" — GSPMD all-gathers the FSDP shard at use.
+* Stacked scan weights carry a leading layer axis (never sharded).
+* MoE expert stacks: experts over "model" (EP), d_model over "data".
+* Embeddings / logits: vocab over "model".
+* Non-divisible dims rely on GSPMD padding (<= 1/16 waste, documented).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Ordered (regex, spec) pairs; first match wins."""
+
+    rules: Sequence[tuple[str, P]]
+    default: P = P()
+
+    def spec(self, path: str) -> P:
+        for pat, spec in self.rules:
+            if re.search(pat, path):
+                return spec
+        return self.default
+
+
+def spec_for_path(rules: ShardingRules, path: str) -> P:
+    return rules.spec(path)
+
+
+def shard_params_tree(params: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    """NamedSharding pytree matching `params` structure (for jit shardings
+    or device_put)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    shardings = []
+    for path, leaf in flat:
+        spec = rules.spec(jax.tree_util.keystr(path))
+        # Drop trailing spec entries beyond leaf rank.
+        spec = P(*spec[: getattr(leaf, "ndim", 0)])
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)

@@ -1,0 +1,76 @@
+"""Straggler detection and mitigation hooks.
+
+At 1000+ nodes, tail-latency hosts dominate synchronous step time.  The
+monitor implements the standard control loop:
+
+  1. track per-step wall times (EWMA + robust deviation);
+  2. flag a step whose duration exceeds `threshold x` the EWMA;
+  3. after `strikes` consecutive flags, escalate: the runner's
+     `on_straggler` callback fires (in production: demote the host to a
+     hot spare / shrink the data-parallel group; in this simulation:
+     recorded + surfaced to the fault-tolerant runner which can trigger
+     an elastic re-mesh through the same path as a failure).
+
+The detector is deliberately host-local and stateless across restarts —
+it must keep working when the cluster membership changes under it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 2.0          # x EWMA to flag
+    strikes_to_escalate: int = 3
+    ewma_alpha: float = 0.1
+    warmup_steps: int = 5           # ignore compile-dominated first steps
+
+    _ewma: float = 0.0
+    _seen: int = 0
+    _strikes: int = 0
+    flagged_steps: list = dataclasses.field(default_factory=list)
+    escalations: int = 0
+    on_straggler: Callable[[int, float], None] | None = None
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        """Record a step duration; returns True if flagged as straggler."""
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            self._ewma = duration_s if self._ewma == 0 else (
+                0.5 * self._ewma + 0.5 * duration_s
+            )
+            return False
+        flagged = duration_s > self.threshold * max(self._ewma, 1e-9)
+        if flagged:
+            self.flagged_steps.append((step, duration_s))
+            self._strikes += 1
+            if self._strikes >= self.strikes_to_escalate:
+                self.escalations += 1
+                self._strikes = 0
+                if self.on_straggler is not None:
+                    self.on_straggler(step, duration_s)
+        else:
+            self._strikes = 0
+            self._ewma = (
+                (1 - self.ewma_alpha) * self._ewma + self.ewma_alpha * duration_s
+            )
+        return flagged
+
+    def timed(self, step: int):
+        """Context manager: `with monitor.timed(step): run_step()`."""
+        monitor = self
+
+        class _Ctx:
+            def __enter__(self):
+                self.t0 = time.perf_counter()
+                return self
+
+            def __exit__(self, *exc):
+                monitor.observe(step, time.perf_counter() - self.t0)
+                return False
+
+        return _Ctx()

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes:
+#   fwht     - the digital inverse-Hadamard decode (HD-PV/HARP periphery)
+#   wv_step  - fused verify-tail -> write cell update (the WV inner loop)
+#   acim_vmm - bit-sliced CBA inference VMM with fused ADC epilogue
+# Each subpackage ships <name>.py (pl.pallas_call + BlockSpec), ops.py
+# (jit'd wrapper with backend dispatch) and ref.py (pure-jnp oracle).

@@ -1,0 +1,22 @@
+"""Public wrapper for the bit-sliced ACiM VMM kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .acim_vmm import acim_vmm_pallas
+
+
+def acim_vmm(
+    x, g_pos, g_neg, *, bc: int, adc_bits: int, full_scale: float,
+    use_pallas: bool = True,
+):
+    """Bit-sliced signed ACiM VMM with per-slice ADC quantization."""
+    if not use_pallas:
+        return ref.acim_vmm(x, g_pos, g_neg, bc, adc_bits, full_scale)
+    on_tpu = jax.default_backend() == "tpu"
+    return acim_vmm_pallas(
+        x, g_pos, g_neg, bc=bc, adc_bits=adc_bits, full_scale=full_scale,
+        interpret=not on_tpu,
+    )

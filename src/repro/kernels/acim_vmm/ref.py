@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the bit-sliced ACiM VMM kernel.
+
+Simulates the CBA macro's inference datapath (paper Fig. 2 / 6(b)): a
+weight matrix stored as k = B/Bc conductance slices on signed column
+pairs, with per-column ADC quantization of every slice's partial sums
+and digital shift-and-add recombination:
+
+    y = sum_l 2^(Bc*(l-1)) * ADC( x @ (G+_l - G-_l) )
+
+The ADC clamps each slice's analog partial sums to its full-scale range
+(n-bit over [-FS/2, FS/2]) — the same converter the verify path uses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_quantize(y: jax.Array, bits: int, full_scale: float) -> jax.Array:
+    """n-bit uniform quantization over [-FS/2, FS/2] (dequantized)."""
+    w = full_scale / float(1 << bits)
+    lo = -full_scale / 2.0
+    code = jnp.clip(jnp.round((jnp.clip(y, lo, -lo) - lo) / w), 0, (1 << bits) - 1)
+    return lo + code * w
+
+
+def acim_vmm(
+    x: jax.Array,            # (B, K) activations
+    g_pos: jax.Array,        # (S, K, M) positive-column conductance levels
+    g_neg: jax.Array,        # (S, K, M) negative-column conductance levels
+    bc: int,                 # bits per cell
+    adc_bits: int,
+    full_scale: float,
+) -> jax.Array:
+    """Bit-sliced signed VMM with per-slice ADC quantization: (B, M)."""
+    s = g_pos.shape[0]
+    acc = jnp.zeros((x.shape[0], g_pos.shape[2]), jnp.float32)
+    for l in range(s):
+        part = x.astype(jnp.float32) @ (g_pos[l] - g_neg[l]).astype(jnp.float32)
+        part = adc_quantize(part, adc_bits, full_scale)
+        acc = acc + part * float(1 << (bc * l))
+    return acc

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: batched Walsh-Hadamard transform over RRAM columns.
+
+Hardware co-design note (TPU adaptation of the paper's digital decode):
+the classic O(N log N) FWHT butterfly is the right dataflow for CPUs and
+for the paper's shift-and-add periphery, but on TPU the butterfly's
+pair-swap stages are *lane-crossing* operations on the 8x128 VREG tiles,
+each compiled to expensive cross-lane shuffles.  For RRAM verify columns
+N <= 128 (the paper uses N = 32 / 64), one column fits inside a single
+MXU tile, so the transform is fastest as a dense matmul against the
+constant +-1 Sylvester matrix: the MXU performs the N^2 MACs in the same
+number of passes the VPU would need for a single butterfly stage.  We
+therefore express the kernel as a block matmul `out = x @ H` with the
+column batch tiled into VMEM blocks, and reserve the butterfly for the
+pure-jnp oracle (ref.py).
+
+Grid: one program per batch block of `block_c` columns.
+BlockSpecs: x block (block_c, N) in VMEM, H (N, N) broadcast to every
+program, out block (block_c, N) in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hadamard import _hadamard_np
+
+DEFAULT_BLOCK_C = 512
+
+
+def _fwht_kernel(x_ref, h_ref, o_ref):
+    # One MXU matmul per block: (block_c, N) @ (N, N).
+    o_ref[...] = jnp.dot(
+        x_ref[...], h_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def fwht_pallas(
+    x: jax.Array, *, block_c: int = DEFAULT_BLOCK_C, interpret: bool = True
+) -> jax.Array:
+    """Batched FWHT: (C, N) -> (C, N), N a power of two <= 128.
+
+    `interpret=True` runs the kernel body on CPU for validation; on a real
+    TPU backend pass interpret=False.
+    """
+    c, n = x.shape
+    if n & (n - 1) or n > 128:
+        raise ValueError(f"kernel supports power-of-two N <= 128, got {n}")
+    h = jnp.asarray(_hadamard_np(n), jnp.float32)
+
+    block_c = min(block_c, c)
+    # Pad the column batch to a multiple of the block size.
+    pad = (-c) % block_c
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // block_c,)
+
+    out = pl.pallas_call(
+        _fwht_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], n), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), h)
+    return out[:c]

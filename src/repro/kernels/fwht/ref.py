@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the batched FWHT kernel.
+
+Delegates to the core butterfly implementation — the kernel must match
+this bit-for-bit in f32 (both compute exact +-1 combinations).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.hadamard import fwht as _fwht_butterfly
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """(C, N) -> (C, N) Walsh-Hadamard transform along the last axis."""
+    return _fwht_butterfly(x, axis=-1)

@@ -1,0 +1,22 @@
+"""Public wrapper for the fused WV cell-update kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .ref import WVCellParams  # noqa: F401
+from .wv_step import wv_cell_update_pallas
+
+
+def wv_cell_update(
+    agg, dev_mag, g, streak, frozen, c2c, nmap, d2d, p: WVCellParams,
+    *, use_pallas: bool = True,
+):
+    """Fused verify-tail + write for one WV iteration (see ref.py)."""
+    if not use_pallas:
+        return ref.wv_cell_update(agg, dev_mag, g, streak, frozen, c2c, nmap, d2d, p)
+    on_tpu = jax.default_backend() == "tpu"
+    return wv_cell_update_pallas(
+        agg, dev_mag, g, streak, frozen, c2c, nmap, d2d, p, interpret=not on_tpu
+    )

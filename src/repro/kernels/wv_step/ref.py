@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the fused WV cell-update kernel.
+
+One fine-WV iteration's *cell-domain* tail, given the per-cell decision
+signal from the verify stage:
+
+  1. ternary decision from the aggregate (threshold)
+  2. streak / freeze bookkeeping (K consecutive stops, warmup gate)
+  3. pulse sizing (ternary: 1; magnitude: round(|dev|/step) capped)
+  4. nominal pulse application with the nonlinear/asymmetric device step
+     (pre-sampled noise fields are inputs: RNG stays outside the kernel)
+
+This chain is 6 elementwise HBM round-trips when left unfused; the Pallas
+kernel does it in one pass over VMEM blocks.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class WVCellParams(NamedTuple):
+    threshold: float        # decision threshold on the aggregate
+    k_streak: int
+    can_freeze: bool        # warmup gate (static per iteration)
+    ternary: bool           # 1 pulse vs magnitude pulses
+    fine_step: float
+    max_pulses: float
+    g_max: float
+    nonlinearity: float
+    reset_asymmetry: float
+
+
+def wv_cell_update(
+    agg: jax.Array,        # verify aggregate (dev estimate or s_w), (C, N)
+    dev_mag: jax.Array,    # |deviation| estimate for pulse sizing, (C, N)
+    g: jax.Array,          # conductances (C, N)
+    streak: jax.Array,     # int32 (C, N)
+    frozen: jax.Array,     # bool (C, N)
+    c2c: jax.Array,        # pre-sampled multiplicative jitter (C, N)
+    nmap: jax.Array,       # pre-sampled additive mapping noise (C, N)
+    d2d: jax.Array,        # static per-cell efficiency (C, N)
+    p: WVCellParams,
+):
+    decision = jnp.where(
+        agg > p.threshold, 1.0, jnp.where(agg < -p.threshold, -1.0, 0.0)
+    )
+    in_thr = decision == 0.0
+    streak_new = jnp.where(in_thr, streak + 1, 0)
+    frozen_new = frozen | (
+        jnp.asarray(p.can_freeze) & (streak_new >= p.k_streak)
+    )
+    col_active = ~jnp.all(frozen, axis=-1, keepdims=True)
+
+    if p.ternary:
+        n_p = jnp.ones_like(g)
+    else:
+        n_p = jnp.clip(jnp.round(dev_mag / p.fine_step), 1.0, p.max_pulses)
+    act = (~frozen) & (decision != 0.0) & col_active
+    n_p = jnp.where(act, n_p, 0.0)
+    direction = jnp.where(act, -decision, 0.0)
+
+    frac = jnp.clip(g / p.g_max, 0.0, 1.0)
+    set_eff = (1.0 - frac) ** p.nonlinearity
+    reset_eff = frac ** p.nonlinearity * p.reset_asymmetry
+    eff = jnp.where(direction > 0, set_eff, reset_eff)
+    delta = direction * p.fine_step * eff * d2d * n_p * c2c
+    g_new = jnp.clip(g + delta + jnp.where(n_p > 0, nmap, 0.0), 0.0, p.g_max)
+    g_new = jnp.where(n_p > 0, g_new, g)
+    return g_new, streak_new, frozen_new, n_p, direction

@@ -1,0 +1,3 @@
+# Launchers: production mesh, multi-pod dry-run, roofline extraction,
+# train/serve/program drivers.  Import modules directly (repro.launch.mesh,
+# repro.launch.dryrun, ...) — dryrun must set XLA_FLAGS before jax init.

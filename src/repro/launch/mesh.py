@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds the cross-DCI "pod" axis
+    (2 pods = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, pods: int = 0):
+    """Small mesh for CI-scale sharding tests (requires
+    xla_force_host_platform_device_count >= n_data*n_model*max(pods,1))."""
+    if pods:
+        return jax.make_mesh(
+            (pods, n_data, n_model),
+            ("pod", "data", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

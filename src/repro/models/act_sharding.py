@@ -1,0 +1,44 @@
+"""Activation sharding constraints at layer boundaries.
+
+GSPMD propagates operand shardings well through simple chains but loses
+them through chunk-loop reshapes and nested remat (observed in the
+dry-run: batch-replicated (L, B, S, D) saved carries and (B*S, V) logit
+grads).  Pinning the batch and tensor axes of the *residual stream* and
+the *logits* is the standard production fix (MaxText does the same).
+
+`constrain(x, mesh, dims)` is a no-op without a mesh, so model code stays
+mesh-agnostic.  dims entries: "batch" (largest ("pod","data") prefix
+dividing the leading dim), "model", or None.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _batch_axes(mesh: Mesh, dim: int):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    chosen, total = [], 1
+    for a in axes:
+        if dim % (total * sizes[a]) == 0:
+            chosen.append(a)
+            total *= sizes[a]
+    return tuple(chosen) if chosen else None
+
+
+def constrain(x: jax.Array, mesh: Mesh | None, dims: tuple):
+    """with_sharding_constraint with symbolic dims; no-op if mesh is None."""
+    if mesh is None:
+        return x
+    spec = []
+    for i, d in enumerate(dims):
+        if d == "batch":
+            spec.append(_batch_axes(mesh, x.shape[i]))
+        elif d is None:
+            spec.append(None)
+        else:
+            size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(d, 1)
+            spec.append(d if x.shape[i] % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,201 @@
+"""Attention: chunked (flash-style) causal self-attention, GQA, sliding
+window, cross-attention, and single-token decode over KV caches.
+
+The training/prefill path never materializes the (S, S) score matrix:
+an outer `lax.scan` walks query chunks and an inner `lax.fori_loop`
+walks only the key/value chunks inside the causal (and sliding-window)
+footprint, carrying the online-softmax state (m, l, acc).  This is the
+flash dataflow expressed in pure JAX — it lowers on any backend, keeps
+peak memory at (chunk_q x chunk_kv), and does no masked-out chunk work
+(the fori bounds are exact, not masked).
+
+GQA is computed in grouped form: q is reshaped to (KV, G) head groups so
+k/v are never repeated in memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group_q(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def chunked_causal_attention(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, S, KV, hd)
+    v: jax.Array,          # (B, S, KV, hd)
+    *,
+    chunk_q: int,
+    chunk_kv: int,
+    window: int = 0,       # 0 = full causal; >0 = sliding window
+    pos_offset: int = 0,   # absolute position of q[0] (prefill continuation)
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    kv_heads = k.shape[2]
+    cq = min(chunk_q, s)
+    ck = min(chunk_kv, k.shape[1])
+    # Pad to chunk multiples: padded kv sits at positions beyond every real
+    # query, so the causal mask already excludes it; padded q rows are
+    # sliced off at the end.
+    pad_q = (-s) % cq
+    pad_k = (-k.shape[1]) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad_q
+    nq, nk = s // cq, k.shape[1] // ck
+    scale = hd**-0.5
+    qg = _group_q(q, kv_heads)  # (B, S, KV, G, hd)
+    g = qg.shape[3]
+
+    q_chunks = qg.reshape(b, nq, cq, kv_heads, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    # Outer loop over q chunks is a Python loop: the causal / windowed kv
+    # footprint [j_start, j_end) is then STATIC per chunk, so the inner
+    # lax.scan has a fixed trip count — no masked-out chunk work AND
+    # reverse-mode differentiability (dynamic-bound fori_loop has no VJP).
+    #
+    # Memory discipline under autodiff: the (cq x ck) probability tiles
+    # must NEVER be saved for backward (that reconstitutes the O(S^2)
+    # matrix).  Both the per-q-chunk body and the per-kv-step body are
+    # jax.checkpoint'ed, so backward recomputes one probability tile at a
+    # time — peak live set is O(cq*ck) + the small (m, l, acc) carries.
+
+    def make_kv_step(qpos):
+        def kv_step(st, qi, kj, vj, j):
+            m, l, acc = st
+            s_ij = (
+                jnp.einsum(
+                    "bqkgd,bckd->bqkgc", qi, kj, preferred_element_type=jnp.float32
+                )
+                * scale
+            )  # (B, cq, KV, G, ck)
+            kpos = j * ck + jnp.arange(ck)
+            mask = qpos[:, None] >= kpos[None, :]
+            if window > 0:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s_ij = jnp.where(mask[None, :, None, None, :], s_ij, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd",
+                p.astype(v.dtype),
+                vj,
+                preferred_element_type=jnp.float32,
+            )
+            return m_new, l_new, acc_new
+
+        return kv_step
+
+    outs = []
+    for i in range(nq):
+        qpos = pos_offset + i * cq + jnp.arange(cq)  # (cq,)
+        kv_step = jax.checkpoint(make_kv_step(qpos))
+        if window > 0:
+            j_start = max(0, (pos_offset + i * cq - window) // ck)
+        else:
+            j_start = 0
+        j_end = min(nk, (pos_offset + (i + 1) * cq - 1) // ck + 1)
+        n_j = j_end - j_start
+
+        def one_chunk(qi, k_sl, v_sl):
+            m0 = jnp.full((b, cq, kv_heads, g), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, cq, kv_heads, g), jnp.float32)
+            a0 = jnp.zeros((b, cq, kv_heads, g, hd), jnp.float32)
+
+            def body(st, xs):
+                kj, vj, j = xs
+                return kv_step(st, qi, kj, vj, j), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                body,
+                (m0, l0, a0),
+                (
+                    k_sl.swapaxes(0, 1),
+                    v_sl.swapaxes(0, 1),
+                    j_start + jnp.arange(n_j, dtype=jnp.int32),
+                ),
+            )
+            return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+        qi = q_chunks[i]
+        k_sl = k[:, j_start * ck : j_end * ck].reshape(b, n_j, ck, kv_heads, hd)
+        v_sl = v[:, j_start * ck : j_end * ck].reshape(b, n_j, ck, kv_heads, hd)
+        outs.append(jax.checkpoint(one_chunk)(qi, k_sl, v_sl))
+
+    # nq x (B, cq, KV, G, hd) -> (B, S, H, hd)
+    outs = jnp.stack(outs, axis=1).reshape(b, s, kv_heads, g, hd)
+    return outs.reshape(b, s, h, hd)[:, :s_orig]
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, hd)
+    k_cache: jax.Array,    # (B, Smax, KV, hd)
+    v_cache: jax.Array,    # (B, Smax, KV, hd)
+    pos: jax.Array,        # (B,) index of the current token (its kv is written)
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention over a (possibly windowed) KV cache."""
+    b, smax, kv_heads, hd = k_cache.shape
+    h = q.shape[2]
+    g = h // kv_heads
+    qg = q.reshape(b, kv_heads, g, hd)
+    s = (
+        jnp.einsum("bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32)
+        * hd**-0.5
+    )
+    idx = jnp.arange(smax)[None, :]  # (1, Smax)
+    valid = idx <= pos[:, None]
+    if window > 0:
+        valid &= idx > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def cross_attention(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, T, KV, hd) conditioning keys
+    v: jax.Array,          # (B, T, KV, hd)
+    *,
+    chunk_q: int,
+) -> jax.Array:
+    """Unmasked cross-attention, chunked over the query axis only (the
+    conditioning context T — image patches / text tokens — is short)."""
+    b, s, h, hd = q.shape
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    cq = min(chunk_q, s)
+    pad_q = (-s) % cq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad_q
+    nq = s // cq
+    qg = _group_q(q, kv_heads).reshape(b, nq, cq, kv_heads, g, hd).transpose(
+        1, 0, 2, 3, 4, 5
+    )
+
+    def per_chunk(carry, qi):
+        sc = (
+            jnp.einsum("bqkgd,btkd->bqkgt", qi, k, preferred_element_type=jnp.float32)
+            * hd**-0.5
+        )
+        p = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bqkgt,btkd->bqkgd", p, v, preferred_element_type=jnp.float32)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(per_chunk, None, qg)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)[:, :s_orig]

@@ -1,0 +1,357 @@
+"""KV-cache construction, prefill and single-token decode for all archs.
+
+Cache layouts (all pytrees of arrays — checkpointable / shardable):
+
+  attn models : k/v stacked (L, B, Smax, KV, hd) + pos (B,)
+  + cross-attn: cross_k/cross_v (L_cross, B, T, KV, hd) precomputed once
+  rwkv6       : wkv (L, B, H, hd, hd), shift_t/shift_c (L, B, D)
+  hymba       : k/v_global (Lg, B, Smax, KV, hd) — full-length cache for
+                the few global layers; k/v_swa (Ls, B, W, KV, hd) — ring
+                buffers for sliding-window layers (RoPE is applied at
+                write time with absolute positions, so ring order is
+                irrelevant to attention); ssm_h (L, B, d, n)
+
+`long_500k` viability comes from exactly this split: at 524288 context,
+rwkv6 carries O(1) state and hymba carries 3 full-length caches + 29
+window-sized rings instead of 32 full caches (DESIGN.md Sec. 5).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import rwkv6 as rwkv_mod
+from . import ssm as ssm_mod
+from .attention import decode_attention
+from .config import ModelConfig
+from .transformer import (
+    _cond_kv,
+    _ffn,
+    _hymba_window,
+    _project_qkv,
+    embed_inputs,
+    forward,
+    output_logits,
+)
+from .layers import matmul, rms_norm
+
+
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict[str, Any]:
+    kvshape = lambda L, s: (L, batch, s, cfg.n_kv_heads, cfg.head_dim)
+    pos = jnp.zeros((batch,), jnp.int32)
+    if cfg.block == "rwkv6":
+        h = cfg.d_model // cfg.head_dim
+        return {
+            "wkv": jnp.zeros((cfg.n_layers, batch, h, cfg.head_dim, cfg.head_dim), jnp.float32),
+            "shift_t": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+            "shift_c": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+            "pos": pos,
+        }
+    if cfg.block == "hymba":
+        n_global = sum(
+            1 for li in range(cfg.n_layers) if _hymba_window(cfg, li) == 0
+        )
+        n_swa = cfg.n_layers - n_global
+        w = min(cfg.sliding_window, max_len)
+        return {
+            "k_global": jnp.zeros(kvshape(n_global, max_len), cfg.dtype),
+            "v_global": jnp.zeros(kvshape(n_global, max_len), cfg.dtype),
+            "k_swa": jnp.zeros(kvshape(n_swa, w), cfg.dtype),
+            "v_swa": jnp.zeros(kvshape(n_swa, w), cfg.dtype),
+            "ssm_h": jnp.zeros(
+                (cfg.n_layers, batch, cfg.d_model, cfg.ssm_state), jnp.float32
+            ),
+            "pos": pos,
+        }
+    cache: dict[str, Any] = {
+        "k": jnp.zeros(kvshape(cfg.n_layers, max_len), cfg.dtype),
+        "v": jnp.zeros(kvshape(cfg.n_layers, max_len), cfg.dtype),
+        "pos": pos,
+    }
+    if cfg.cross_attn_every > 0 or cfg.cross_d_cond > 0:
+        lc = cfg.num_cross_layers if cfg.cross_attn_every > 0 else cfg.n_layers
+        t = cfg.cross_kv_len
+        cache["cross_k"] = jnp.zeros(kvshape(lc, t), cfg.dtype)
+        cache["cross_v"] = jnp.zeros(kvshape(lc, t), cfg.dtype)
+    return cache
+
+
+# --------------------------------------------------------------------------
+def prefill(params, batch: dict, cfg: ModelConfig, mesh=None, max_len: int | None = None):
+    """Run the full prompt, materialize caches sized to max_len.
+    Returns (last_logits, cache)."""
+    tokens_or = batch.get("tokens", batch.get("embeds"))
+    b, s = tokens_or.shape[:2]
+    max_len = max_len or s
+    logits, _aux, kv = forward(params, batch, cfg, mesh, collect_cache=True)
+    cache = init_cache(cfg, b, max_len)
+    cache["pos"] = jnp.full((b,), s - 1, jnp.int32)
+
+    if cfg.block == "rwkv6":
+        cache.update(kv)
+        return logits[:, -1], cache
+    if cfg.block == "hymba":
+        w = min(cfg.sliding_window, max_len)
+        cache["k_global"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_global"], kv["k_global"], 0, axis=2
+        )
+        cache["v_global"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_global"], kv["v_global"], 0, axis=2
+        )
+        # SWA caches were already truncated to the window in forward();
+        # write them at ring slots matching absolute positions.
+        kswa, vswa = kv["k_swa"], kv["v_swa"]
+        wlen = kswa.shape[2]
+        slots = (s - wlen + jnp.arange(wlen)) % w
+        cache["k_swa"] = cache["k_swa"].at[:, :, slots].set(kswa[:, :, -w:])
+        cache["v_swa"] = cache["v_swa"].at[:, :, slots].set(vswa[:, :, -w:])
+        cache["ssm_h"] = kv.get("ssm_h", cache["ssm_h"])
+        return logits[:, -1], cache
+
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kv["k"], 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], kv["v"], 0, axis=2)
+    if "cross_k" in cache and batch.get("cond") is not None:
+        cls = params["cross_layers"]
+        n_cl = jax.tree.leaves(cls)[0].shape[0]
+        ks, vs = [], []
+        for gi in range(n_cl):
+            cl = jax.tree.map(lambda a: a[gi], cls)
+            ck, cv = _cond_kv(batch["cond"], cl, cfg)
+            ks.append(ck)
+            vs.append(cv)
+        cache["cross_k"] = jnp.stack(ks)
+        cache["cross_v"] = jnp.stack(vs)
+    return logits[:, -1], cache
+
+
+# --------------------------------------------------------------------------
+def _decode_attn_layer(x, pl, cfg, kc, vc, pos, window, positions):
+    """One decode attention sublayer; returns (attn_out, kc', vc')."""
+    b = x.shape[0]
+    q, k1, v1 = _project_qkv(x, pl, cfg, positions)
+    if window > 0:
+        slot = pos % kc.shape[1]
+    else:
+        slot = pos
+    kc = kc.at[jnp.arange(b), slot].set(k1[:, 0])
+    vc = vc.at[jnp.arange(b), slot].set(v1[:, 0])
+    if window > 0:
+        # ring buffer: every slot holds an in-window entry once warm;
+        # mask invalid (not yet written) slots for pos < window.
+        valid_count = jnp.minimum(pos + 1, kc.shape[1])
+        attn = decode_attention(
+            q, kc, vc, jnp.maximum(valid_count - 1, 0), window=0
+        )
+    else:
+        attn = decode_attention(q, kc, vc, pos, window=0)
+    return matmul(attn.reshape(b, 1, cfg.q_dim), pl["wo"]), kc, vc
+
+
+def _decode_cross(x, cl, cache, gi, cfg):
+    b = x.shape[0]
+    h = rms_norm(x, cl["norm"], cfg.norm_eps)
+    q = matmul(h, cl["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    t = cache["cross_k"].shape[2]
+    out = decode_attention(
+        q, cache["cross_k"][gi], cache["cross_v"][gi],
+        jnp.full((b,), t - 1, jnp.int32),
+    )
+    out = matmul(out.reshape(b, 1, cfg.q_dim), cl["wo"])
+    gate = jnp.tanh(cl["gate"].astype(jnp.float32)).astype(x.dtype)
+    return x + gate * out
+
+
+def decode_step(params, cache: dict, batch: dict, cfg: ModelConfig, mesh=None):
+    """One token for the whole batch. batch: tokens (B,1) or embeds
+    (B,1,D).  Returns (logits (B,1,V...), new_cache)."""
+    x = embed_inputs(
+        params, {**batch, "pos_offset": cache["pos"][0] + 1}, cfg
+    )
+    b = x.shape[0]
+    pos = cache["pos"] + 1  # position of the current token
+    positions = pos[:, None]
+    new_cache = dict(cache)
+    new_cache["pos"] = pos
+    lay = params["layers"] if cfg.block != "rwkv6" else None
+
+    if cfg.block == "rwkv6":
+        lay = params["layers"]
+
+        def body(x, xs):
+            wkv, st_, sc_ = xs
+            st = rwkv_mod.RWKVState(wkv, st_, sc_)
+            y, wkv_new, shift_t = rwkv_mod.time_mix(x, lay, 0, cfg, st)
+            x = x + y
+            cm, shift_c = rwkv_mod.channel_mix(x, lay, 0, cfg, st)
+            return x + cm, (wkv_new, shift_t, shift_c)
+
+        # scan over layers: index via stacked params closure
+        def body_idx(carry, xs):
+            x = carry
+            idx, wkv, st_, sc_ = xs
+            st = rwkv_mod.RWKVState(wkv, st_, sc_)
+            y, wkv_new, shift_t = rwkv_mod.time_mix(x, lay, idx, cfg, st)
+            x = x + y
+            cm, shift_c = rwkv_mod.channel_mix(x, lay, idx, cfg, st)
+            return x + cm, (wkv_new, shift_t, shift_c)
+
+        x, states = jax.lax.scan(
+            body_idx,
+            x,
+            (jnp.arange(cfg.n_layers), cache["wkv"], cache["shift_t"], cache["shift_c"]),
+        )
+        new_cache["wkv"], new_cache["shift_t"], new_cache["shift_c"] = states
+        return output_logits(params, x, cfg, mesh), new_cache
+
+    if cfg.block == "hymba":
+        # Homogeneous-run scans (compile hygiene, mirrors _forward_hymba):
+        # each run of equal-window layers scans with its cache slices as
+        # scan xs/ys; run boundaries advance the global/SWA cache cursors.
+        from .transformer import _hymba_runs
+
+        kg, vg = cache["k_global"], cache["v_global"]
+        ks, vs = cache["k_swa"], cache["v_swa"]
+        hs = cache["ssm_h"]
+        gi = si = 0
+
+        def one_layer(x, pl, spl, bn, kc, vc, win, h0):
+            attn, kc, vc = _decode_attn_layer(
+                x, pl, cfg, kc, vc, pos, win, positions
+            )
+            ssm_out, st_new = ssm_mod.ssm_branch(
+                x, spl, cfg, ssm_mod.SSMState(h0)
+            )
+            x = x + 0.5 * (
+                rms_norm(attn, bn[0], cfg.norm_eps)
+                + rms_norm(ssm_out, bn[1], cfg.norm_eps)
+            )
+            ff, _ = _ffn(x, pl, cfg, mesh)
+            return x + ff, kc, vc, st_new.h
+
+        for start, end, win in _hymba_runs(cfg):
+            n_run = end - start
+            sub_lay = jax.tree.map(lambda a: a[start:end], lay)
+            sub_ssm = jax.tree.map(lambda a: a[start:end], params["ssm"])
+            sub_bn = params["branch_norm"][start:end]
+            if win == 0:
+                kc_sl, vc_sl = kg[gi : gi + n_run], vg[gi : gi + n_run]
+            else:
+                kc_sl, vc_sl = ks[si : si + n_run], vs[si : si + n_run]
+            h_sl = hs[start:end]
+
+            if n_run == 1:
+                pl = jax.tree.map(lambda a: a[0], sub_lay)
+                spl = jax.tree.map(lambda a: a[0], sub_ssm)
+                x, kc1, vc1, h1 = one_layer(
+                    x, pl, spl, sub_bn[0], kc_sl[0], vc_sl[0], win, h_sl[0]
+                )
+                knew, vnew, hnew = kc1[None], vc1[None], h1[None]
+            else:
+
+                def body(carry, xs, win=win):
+                    x = carry
+                    pl, spl, bn, kc, vc, h0 = xs
+                    x, kc, vc, h1 = one_layer(x, pl, spl, bn, kc, vc, win, h0)
+                    return x, (kc, vc, h1)
+
+                x, (knew, vnew, hnew) = jax.lax.scan(
+                    body, x, (sub_lay, sub_ssm, sub_bn, kc_sl, vc_sl, h_sl)
+                )
+            if win == 0:
+                kg = jax.lax.dynamic_update_slice_in_dim(kg, knew, gi, axis=0)
+                vg = jax.lax.dynamic_update_slice_in_dim(vg, vnew, gi, axis=0)
+                gi += n_run
+            else:
+                ks = jax.lax.dynamic_update_slice_in_dim(ks, knew, si, axis=0)
+                vs = jax.lax.dynamic_update_slice_in_dim(vs, vnew, si, axis=0)
+                si += n_run
+            hs = jax.lax.dynamic_update_slice_in_dim(hs, hnew, start, axis=0)
+        new_cache.update(
+            k_global=kg, v_global=vg, k_swa=ks, v_swa=vs, ssm_h=hs
+        )
+        return output_logits(params, x, cfg, mesh), new_cache
+
+    # attention stacks (dense / moe / musicgen / vlm)
+    per_layer_cross = (
+        cfg.cross_attn_every == 0 and "cross_k" in cache and cfg.cross_kv_len > 0
+    )
+    grouped_cross = cfg.cross_attn_every > 0
+
+    if grouped_cross:
+        n_groups = cfg.num_cross_layers
+        per = cfg.n_layers // n_groups
+        kc_all, vc_all = cache["k"], cache["v"]
+        k_out, v_out = [], []
+        for gi in range(n_groups):
+            cl = jax.tree.map(lambda a, gi=gi: a[gi], params["cross_layers"])
+            x = _decode_cross(x, cl, cache, gi, cfg)
+
+            def body(carry, xs):
+                x = carry
+                pl, kc, vc = xs
+                attn, kc, vc = _decode_attn_layer(
+                    x, pl, cfg, kc, vc, pos, cfg.sliding_window, positions
+                )
+                x = x + attn
+                ff, _ = _ffn(x, pl, cfg, mesh)
+                return x + ff, (kc, vc)
+
+            group = jax.tree.map(
+                lambda a, gi=gi: a[gi * per : (gi + 1) * per], lay
+            )
+            x, (knew, vnew) = jax.lax.scan(
+                body, x, (group, kc_all[gi * per : (gi + 1) * per],
+                          vc_all[gi * per : (gi + 1) * per])
+            )
+            k_out.append(knew)
+            v_out.append(vnew)
+        new_cache["k"] = jnp.concatenate(k_out, axis=0)
+        new_cache["v"] = jnp.concatenate(v_out, axis=0)
+        return output_logits(params, x, cfg, mesh), new_cache
+
+    def body(carry, xs):
+        x = carry
+        pl, kc, vc = xs
+        attn, kc, vc = _decode_attn_layer(
+            x, pl, cfg, kc, vc, pos, cfg.sliding_window, positions
+        )
+        x = x + attn
+        ff, _ = _ffn(x, pl, cfg, mesh)
+        return x + ff, (kc, vc)
+
+    if per_layer_cross:
+        # MusicGen: cross-attn every layer, using precomputed cond kv.
+        def body_cross(carry, xs):
+            x = carry
+            pl, cl, kc, vc, ck, cv = xs
+            attn, kc, vc = _decode_attn_layer(
+                x, pl, cfg, kc, vc, pos, cfg.sliding_window, positions
+            )
+            x = x + attn
+            b = x.shape[0]
+            h = rms_norm(x, cl["norm"], cfg.norm_eps)
+            q = matmul(h, cl["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            t = ck.shape[1]
+            c_out = decode_attention(
+                q, ck, cv, jnp.full((b,), t - 1, jnp.int32)
+            )
+            c_out = matmul(c_out.reshape(b, 1, cfg.q_dim), cl["wo"])
+            gate = jnp.tanh(cl["gate"].astype(jnp.float32)).astype(x.dtype)
+            x = x + gate * c_out
+            ff, _ = _ffn(x, pl, cfg, mesh)
+            return x + ff, (kc, vc)
+
+        x, (knew, vnew) = jax.lax.scan(
+            body_cross,
+            x,
+            (lay, params["cross_layers"], cache["k"], cache["v"],
+             cache["cross_k"], cache["cross_v"]),
+        )
+    else:
+        x, (knew, vnew) = jax.lax.scan(body, x, (lay, cache["k"], cache["v"]))
+    new_cache["k"], new_cache["v"] = knew, vnew
+    return output_logits(params, x, cfg, mesh), new_cache

@@ -1,0 +1,176 @@
+"""Token-choice top-k Mixture-of-Experts with expert parallelism.
+
+Sharding strategy (DESIGN.md Sec. 4): activations are replicated along
+the "model" mesh axis and sharded along ("pod","data"); expert weight
+stacks are sharded over "model" (EP) on the expert axis and over "data"
+(FSDP) on d_model.  The layer runs inside `shard_map` so routing stays
+*local* to each device's token shard (no global argsort / no cross-shard
+prefix sums — the classic pjit-MoE pitfall), each device computes only
+its own experts over a capacity-bounded gather buffer, and a single
+psum over "model" combines the partial expert outputs (the same
+collective TP already pays for its MLP output reduction).
+
+Dispatch is the sort-free rank-via-cumsum construction:
+  rank_in_expert(t, e) = cumsum of assignment one-hots over local tokens
+Tokens with rank >= capacity are dropped (pass through the residual),
+matching capacity-factor semantics of production MoE stacks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import dense_init, matmul
+
+
+def init_moe_params(key, cfg: ModelConfig, n_layers: int) -> dict[str, Any]:
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.vmap(lambda k: dense_init(k, d, e, jnp.float32))(
+            jax.random.split(ks[0], n_layers)
+        ),
+        "w_gate": jax.vmap(lambda k: jax.vmap(lambda kk: dense_init(kk, d, f, cfg.dtype))(
+            jax.random.split(k, e)
+        ))(jax.random.split(ks[1], n_layers)),
+        "w_up": jax.vmap(lambda k: jax.vmap(lambda kk: dense_init(kk, d, f, cfg.dtype))(
+            jax.random.split(k, e)
+        ))(jax.random.split(ks[2], n_layers)),
+        "w_down": jax.vmap(lambda k: jax.vmap(lambda kk: dense_init(kk, f, d, cfg.dtype))(
+            jax.random.split(k, e)
+        ))(jax.random.split(ks[3], n_layers)),
+    }
+
+
+def _local_capacity(t_local: int, cfg: ModelConfig) -> int:
+    cap = int(t_local * cfg.moe_top_k * cfg.capacity_factor / cfg.moe_experts)
+    return max(cap, 4)
+
+
+def _moe_local(
+    x,            # (T_local, D) local token shard (replicated over "model")
+    router_w,     # (D, E) replicated
+    w_gate,       # (E_local, D, F) this device's experts
+    w_up,
+    w_down,
+    *,
+    cfg: ModelConfig,
+    axis: str,
+):
+    t_local, d = x.shape
+    e = cfg.moe_experts
+    e_local = w_gate.shape[0]
+    k = cfg.moe_top_k
+    cap = _local_capacity(t_local, cfg)
+    my_first = jax.lax.axis_index(axis) * e_local if axis else 0
+
+    logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, k)                   # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # rank of each (token, choice) within its expert, over local tokens
+    onehot = jax.nn.one_hot(sel, e, dtype=jnp.int32)           # (T, k, E)
+    flat = onehot.reshape(t_local * k, e)
+    ranks = jnp.cumsum(flat, axis=0) - flat                    # exclusive
+    rank_te = jnp.sum(ranks * flat, axis=-1).reshape(t_local, k)
+    keep = rank_te < cap                                        # capacity drop
+
+    # build this device's (E_local, cap) token-index buffer via scatter
+    sel_local = sel - my_first                                  # (T, k)
+    mine = (sel_local >= 0) & (sel_local < e_local) & keep
+    slot = jnp.where(mine, sel_local * cap + rank_te, e_local * cap)
+    buf_tok = jnp.full((e_local * cap + 1,), t_local, jnp.int32)
+    buf_gate = jnp.zeros((e_local * cap + 1,), jnp.float32)
+    flat_slot = slot.reshape(-1)
+    tok_ids = jnp.broadcast_to(
+        jnp.arange(t_local, dtype=jnp.int32)[:, None], (t_local, k)
+    ).reshape(-1)
+    buf_tok = buf_tok.at[flat_slot].set(tok_ids, mode="drop")
+    buf_gate = buf_gate.at[flat_slot].set(gate_vals.reshape(-1), mode="drop")
+    buf_tok = buf_tok[:-1].reshape(e_local, cap)
+    buf_gate = buf_gate[:-1].reshape(e_local, cap)
+
+    # gather tokens (pad row = zeros), grouped expert FFN, combine-scatter
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xe = x_pad[buf_tok]                                         # (E_l, cap, D)
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up, preferred_element_type=jnp.float32)
+    hmid = (jax.nn.silu(g) * u).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", hmid, w_down, preferred_element_type=jnp.float32)
+    ye = ye * buf_gate[..., None]
+
+    out = jnp.zeros((t_local + 1, d), jnp.float32)
+    out = out.at[buf_tok.reshape(-1)].add(ye.reshape(-1, d), mode="drop")
+    out = out[:-1]
+    # combine partial expert outputs across the EP axis
+    if axis:
+        out = jax.lax.psum(out, axis)
+
+    # load-balance auxiliary loss (Switch-style), local fraction statistics
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(sel, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = e * jnp.sum(me * ce)
+    if axis:
+        aux = jax.lax.pmean(aux, axis)
+    return out.astype(x.dtype), aux
+
+
+def moe_block(
+    x: jax.Array,            # (B, S, D) global view
+    layer_params: dict,      # single layer's router/w_gate/w_up/w_down
+    cfg: ModelConfig,
+    mesh: Mesh,
+) -> tuple[jax.Array, jax.Array]:
+    """Global-view MoE FFN; returns (output, aux_loss)."""
+    b, s, d = x.shape
+    if mesh is None:
+        # Single-device fallback (tests / smoke): full expert set, no EP.
+        out, aux = _moe_local(
+            x.reshape(-1, d),
+            layer_params["router"].astype(jnp.float32),
+            layer_params["w_gate"],
+            layer_params["w_up"],
+            layer_params["w_down"],
+            cfg=cfg,
+            axis=None,
+        )
+        return out.reshape(x.shape), aux
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ep_axis = "model"
+
+    def body(xl, rw, wg, wu, wd):
+        tl = xl.reshape(-1, d)
+        out, aux = _moe_local(tl, rw, wg, wu, wd, cfg=cfg, axis=ep_axis)
+        return out.reshape(xl.shape), aux[None]
+
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(batch_axes, None, None),
+            P(None, None),                # router replicated
+            P(ep_axis, None, None),       # experts EP-sharded
+            P(ep_axis, None, None),
+            P(ep_axis, None, None),
+        ),
+        out_specs=(P(batch_axes, None, None), P(batch_axes)),
+        check_vma=False,
+    )(
+        x,
+        layer_params["router"].astype(jnp.float32),
+        layer_params["w_gate"],
+        layer_params["w_up"],
+        layer_params["w_down"],
+    )
+    return out, jnp.mean(aux)

@@ -1,0 +1,475 @@
+"""Unified decoder-only model covering all assigned architectures.
+
+One config-driven implementation provides:
+
+* dense / MoE transformer blocks (GQA, qk-norm, RoPE or sinusoidal pos);
+* RWKV6 blocks (attention-free);
+* Hymba hybrid blocks (parallel GQA + SSM heads; SWA with every-k global
+  attention layers);
+* cross-attention conditioning (VLM image patches every k layers,
+  MusicGen text conditioning every layer);
+* multi-codebook output heads (MusicGen).
+
+Compile hygiene: homogeneous layer stacks are scanned (`lax.scan` over
+stacked params — a 94-layer MoE compiles as one block body); Hymba's
+heterogeneous global/SWA layers use an unrolled loop over stacked params
+(32 layers, two cache groups); the VLM interleaves scanned groups of
+self-attention layers between unrolled cross-attention blocks.
+
+All entry points work under `jax.eval_shape` (the multi-pod dry-run
+never materializes parameters).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import rwkv6 as rwkv_mod
+from . import ssm as ssm_mod
+from .act_sharding import constrain
+from .attention import (
+    chunked_causal_attention,
+    cross_attention,
+    decode_attention,
+)
+from .config import ModelConfig
+from .layers import (
+    apply_rope,
+    cross_entropy_loss,
+    dense_init,
+    head_rms_norm,
+    matmul,
+    rms_norm,
+    sinusoidal_positions,
+    swiglu,
+    truncated_normal,
+)
+from .moe import init_moe_params, moe_block
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+def _attn_layer_params(key, cfg: ModelConfig, n_layers: int) -> dict[str, Any]:
+    d, dt = cfg.d_model, cfg.dtype
+    ks = jax.random.split(key, 8)
+    L = n_layers
+
+    def stack(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, dt))(
+            jax.random.split(k, L)
+        )
+
+    p = {
+        "attn_norm": jnp.zeros((L, d), jnp.float32),
+        "wq": stack(ks[0], d, cfg.q_dim),
+        "wk": stack(ks[1], d, cfg.kv_dim),
+        "wv": stack(ks[2], d, cfg.kv_dim),
+        "wo": stack(ks[3], cfg.q_dim, d),
+        "mlp_norm": jnp.zeros((L, d), jnp.float32),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((L, cfg.head_dim), jnp.float32)
+        p["k_norm"] = jnp.zeros((L, cfg.head_dim), jnp.float32)
+    if cfg.is_moe:
+        p["moe"] = init_moe_params(ks[4], cfg, L)
+    else:
+        p["w_gate"] = stack(ks[4], d, cfg.d_ff)
+        p["w_up"] = stack(ks[5], d, cfg.d_ff)
+        p["w_down"] = stack(ks[6], cfg.d_ff, d)
+    return p
+
+
+def _cross_layer_params(key, cfg: ModelConfig, n_layers: int) -> dict[str, Any]:
+    d, dt, dc = cfg.d_model, cfg.dtype, cfg.cross_d_cond or cfg.d_model
+    ks = jax.random.split(key, 4)
+    L = n_layers
+
+    def stack(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, dt))(
+            jax.random.split(k, L)
+        )
+
+    return {
+        "norm": jnp.zeros((L, d), jnp.float32),
+        "wq": stack(ks[0], d, cfg.q_dim),
+        "wk": stack(ks[1], dc, cfg.kv_dim),
+        "wv": stack(ks[2], dc, cfg.kv_dim),
+        "wo": stack(ks[3], cfg.q_dim, d),
+        "gate": jnp.zeros((L,), jnp.float32),  # zero-init gated residual
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.frontend != "embed_stub":
+        params["tok_embed"] = truncated_normal(
+            ks[0], (cfg.vocab_size, cfg.d_model), 0.02, cfg.dtype
+        )
+    if not cfg.tie_embeddings or cfg.frontend == "embed_stub":
+        params["lm_head"] = truncated_normal(
+            ks[1],
+            (cfg.n_codebooks, cfg.d_model, cfg.vocab_size)
+            if cfg.n_codebooks > 1
+            else (cfg.d_model, cfg.vocab_size),
+            0.02,
+            cfg.dtype,
+        )
+    if cfg.block == "rwkv6":
+        params["layers"] = rwkv_mod.init_rwkv_params(ks[2], cfg, cfg.n_layers)
+        return params
+    params["layers"] = _attn_layer_params(ks[2], cfg, cfg.n_layers)
+    if cfg.block == "hymba":
+        params["ssm"] = ssm_mod.init_ssm_params(ks[3], cfg, cfg.n_layers)
+        params["branch_norm"] = jnp.zeros((cfg.n_layers, 2, cfg.d_model), jnp.float32)
+    if cfg.cross_attn_every > 0 or cfg.cross_kv_len > 0:
+        # grouped (VLM, every k layers) or per-layer (MusicGen) conditioning
+        n_cross = cfg.num_cross_layers if cfg.cross_attn_every > 0 else cfg.n_layers
+        params["cross_layers"] = _cross_layer_params(ks[4], cfg, n_cross)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Blocks (single layer, given sliced params)
+# --------------------------------------------------------------------------
+def _project_qkv(x, pl, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h = rms_norm(x, pl["attn_norm"], cfg.norm_eps)
+    q = matmul(h, pl["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = matmul(h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = matmul(h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, pl["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, pl["k_norm"], cfg.norm_eps)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(x, pl, cfg: ModelConfig, mesh):
+    h = rms_norm(x, pl["mlp_norm"], cfg.norm_eps)
+    if cfg.is_moe:
+        out, aux = moe_block(h, pl["moe"], cfg, mesh)
+        return out, aux
+    return swiglu(h, pl["w_gate"], pl["w_up"], pl["w_down"]), jnp.zeros((), jnp.float32)
+
+
+def _attn_block_train(x, pl, cfg: ModelConfig, mesh, positions, window: int):
+    """One layer, full-sequence (training / prefill). Returns
+    (x_out, aux, k, v) — k/v exported for prefill cache capture."""
+    x = constrain(x, mesh, ("batch", None, None))
+    q, k, v = _project_qkv(x, pl, cfg, positions)
+    q = constrain(q, mesh, ("batch", None, "model", None))
+    k = constrain(k, mesh, ("batch", None, "model", None))
+    v = constrain(v, mesh, ("batch", None, "model", None))
+    attn = chunked_causal_attention(
+        q, k, v, chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv, window=window
+    )
+    attn = matmul(attn.reshape(*x.shape[:2], cfg.q_dim), pl["wo"])
+    x = constrain(x + attn, mesh, ("batch", None, None))
+    ff, aux = _ffn(x, pl, cfg, mesh)
+    res_spec = ("batch", None, "model" if cfg.shard_residual else None)
+    return constrain(x + ff, mesh, res_spec), aux, k, v
+
+
+def _cross_block(x, cl, cond_kv, cfg: ModelConfig):
+    """Gated cross-attention conditioning block (precomputed cond k/v)."""
+    b, s, _ = x.shape
+    h = rms_norm(x, cl["norm"], cfg.norm_eps)
+    q = matmul(h, cl["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k, v = cond_kv
+    out = cross_attention(q, k, v, chunk_q=cfg.attn_chunk_q)
+    out = matmul(out.reshape(b, s, cfg.q_dim), cl["wo"])
+    gate = jnp.tanh(cl["gate"].astype(jnp.float32)).astype(x.dtype)
+    return x + gate * out
+
+
+def _cond_kv(cond, cl, cfg: ModelConfig):
+    b, t, _ = cond.shape
+    k = matmul(cond.astype(cfg.dtype), cl["wk"]).reshape(
+        b, t, cfg.n_kv_heads, cfg.head_dim
+    )
+    v = matmul(cond.astype(cfg.dtype), cl["wv"]).reshape(
+        b, t, cfg.n_kv_heads, cfg.head_dim
+    )
+    return k, v
+
+
+def _hymba_window(cfg: ModelConfig, li: int) -> int:
+    """Hymba: every `global_layer_every`-th layer (plus first/last) is
+    global full attention; the rest use the sliding window."""
+    if cfg.block != "hymba" or cfg.sliding_window <= 0:
+        return cfg.sliding_window if cfg.block != "hymba" else 0
+    is_global = (
+        li == 0
+        or li == cfg.n_layers - 1
+        or (cfg.global_layer_every > 0 and li % cfg.global_layer_every == 0)
+    )
+    return 0 if is_global else cfg.sliding_window
+
+
+# --------------------------------------------------------------------------
+# Embedding / heads
+# --------------------------------------------------------------------------
+def embed_inputs(params, batch: dict, cfg: ModelConfig):
+    if cfg.frontend == "embed_stub":
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = params["tok_embed"][batch["tokens"]].astype(cfg.dtype)
+    if cfg.pos_embedding == "sinusoidal":
+        s = x.shape[1]
+        off = batch.get("pos_offset", 0)
+        pos = off + jnp.arange(s)
+        x = x + sinusoidal_positions(pos, cfg.d_model)[None].astype(cfg.dtype)
+    return x
+
+
+def output_logits(params, x, cfg: ModelConfig, mesh=None):
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.n_codebooks > 1:
+        out = jnp.einsum(
+            "bsd,cdv->bscv", h, params["lm_head"], preferred_element_type=jnp.float32
+        )
+        return constrain(out, mesh, ("batch", None, None, "model"))
+    if "lm_head" in params:
+        out = matmul(h, params["lm_head"]).astype(jnp.float32)
+    else:
+        out = jnp.einsum(
+            "bsd,vd->bsv", h, params["tok_embed"], preferred_element_type=jnp.float32
+        )
+    return constrain(out, mesh, ("batch", None, "model"))
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# --------------------------------------------------------------------------
+def forward(
+    params,
+    batch: dict,
+    cfg: ModelConfig,
+    mesh=None,
+    *,
+    collect_cache: bool = False,
+    pos_offset: int = 0,
+):
+    """Full-sequence forward.  batch: tokens (B,S) or embeds (B,S,D),
+    optional cond (B,T,dc).  Returns (logits, aux_loss, caches|None)."""
+    x = embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = pos_offset + jnp.arange(s)[None, :]
+
+    if cfg.block == "rwkv6":
+        return _forward_rwkv(params, x, cfg, mesh, collect_cache)
+
+    cond = batch.get("cond")
+    lay = params["layers"]
+
+    if cfg.block == "hymba":
+        return _forward_hymba(params, x, cfg, mesh, positions, collect_cache)
+
+    if cfg.cross_attn_every > 0 and cfg.cross_attn_every < cfg.n_layers:
+        return _forward_grouped_cross(
+            params, x, cond, cfg, mesh, positions, collect_cache
+        )
+
+    # Homogeneous stack: one scan over layers (optionally with per-layer
+    # cross-attention conditioning, e.g. MusicGen).
+    per_layer_cross = cfg.cross_attn_every == 0 and cond is not None
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, idx):
+        x, aux = carry
+        pl = jax.tree.map(lambda a: a[idx], lay)
+        x, aux_i, k, v = _attn_block_train(
+            x, pl, cfg, mesh, positions, window=cfg.sliding_window
+        )
+        if per_layer_cross:
+            cl = jax.tree.map(lambda a: a[idx], params["cross_layers"])
+            x = _cross_block(x, cl, _cond_kv(cond, cl, cfg), cfg)
+        ys = (k, v) if collect_cache else None
+        return (x, aux + aux_i), ys
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), kv = jax.lax.scan(body_fn, (x, aux0), jnp.arange(cfg.n_layers))
+    caches = None
+    if collect_cache:
+        caches = {"k": kv[0], "v": kv[1]}  # (L, B, S, KV, hd)
+    return output_logits(params, x, cfg, mesh), aux / cfg.n_layers, caches
+
+
+def _forward_rwkv(params, x, cfg: ModelConfig, mesh, collect_cache):
+    lay = params["layers"]
+    b = x.shape[0]
+    st0 = rwkv_mod.init_rwkv_state(cfg, b)
+
+    def body(carry, idx):
+        x, _ = carry
+        x = constrain(x, mesh, ("batch", None, None))
+        y, wkv_fin, shift_t = rwkv_mod.time_mix(
+            x, lay, idx, cfg,
+            rwkv_mod.RWKVState(st0.wkv, st0.shift_t, st0.shift_c), mesh,
+        )
+        x = x + y
+        cm, shift_c = rwkv_mod.channel_mix(
+            x, lay, idx, cfg,
+            rwkv_mod.RWKVState(st0.wkv, st0.shift_t, st0.shift_c), mesh,
+        )
+        x = x + cm
+        res_spec = ("batch", None, "model" if cfg.shard_residual else None)
+        x = constrain(x, mesh, res_spec)
+        ys = (wkv_fin, shift_t, shift_c) if collect_cache else None
+        return (x, jnp.zeros((), jnp.float32)), ys
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), states = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), jnp.arange(cfg.n_layers)
+    )
+    caches = None
+    if collect_cache:
+        caches = {"wkv": states[0], "shift_t": states[1], "shift_c": states[2]}
+    return output_logits(params, x, cfg, mesh), aux, caches
+
+
+def _hymba_runs(cfg: ModelConfig) -> list[tuple[int, int, int]]:
+    """Consecutive layer runs with equal attention window: (start, end, win).
+    Hymba's 3 global layers split the 29 SWA layers into long homogeneous
+    runs that can be scanned (compile-time hygiene for the 32-layer stack)."""
+    runs: list[tuple[int, int, int]] = []
+    for li in range(cfg.n_layers):
+        w = _hymba_window(cfg, li)
+        if runs and runs[-1][2] == w:
+            runs[-1] = (runs[-1][0], li + 1, w)
+        else:
+            runs.append((li, li + 1, w))
+    return runs
+
+
+def _forward_hymba(params, x, cfg: ModelConfig, mesh, positions, collect_cache):
+    """Heterogeneous stack as scanned homogeneous runs (global vs SWA)."""
+    lay, ssm_p = params["layers"], params["ssm"]
+    aux = jnp.zeros((), jnp.float32)
+    kv_global, kv_swa, ssm_finals = [], [], []
+    res_spec = ("batch", None, "model" if cfg.shard_residual else None)
+
+    def layer(x, pl, spl, bn, win):
+        x = constrain(x, mesh, ("batch", None, None))
+        q, k, v = _project_qkv(x, pl, cfg, positions)
+        q = constrain(q, mesh, ("batch", None, "model", None))
+        k = constrain(k, mesh, ("batch", None, "model", None))
+        v = constrain(v, mesh, ("batch", None, "model", None))
+        attn = chunked_causal_attention(
+            q, k, v, chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv, window=win
+        )
+        attn = matmul(attn.reshape(*x.shape[:2], cfg.q_dim), pl["wo"])
+        ssm_out, ssm_fin = ssm_mod.ssm_branch(
+            x, spl, cfg, ssm_mod.init_ssm_state(cfg, x.shape[0]), mesh
+        )
+        x = x + 0.5 * (
+            rms_norm(attn, bn[0], cfg.norm_eps) + rms_norm(ssm_out, bn[1], cfg.norm_eps)
+        )
+        ff, aux_i = _ffn(x, pl, cfg, mesh)
+        return constrain(x + ff, mesh, res_spec), aux_i, k, v, ssm_fin.h
+
+    for start, end, win in _hymba_runs(cfg):
+        sub_lay = jax.tree.map(lambda a: a[start:end], lay)
+        sub_ssm = jax.tree.map(lambda a: a[start:end], ssm_p)
+        sub_bn = params["branch_norm"][start:end]
+        keep = win if win else None
+        if end - start == 1:
+            pl = jax.tree.map(lambda a: a[0], sub_lay)
+            spl = jax.tree.map(lambda a: a[0], sub_ssm)
+            x, aux_i, k, v, hfin = layer(x, pl, spl, sub_bn[0], win)
+            aux += aux_i
+            if collect_cache:
+                kv = (k[:, -win:], v[:, -win:]) if win else (k, v)
+                (kv_global if win == 0 else kv_swa).append(kv)
+                ssm_finals.append(hfin)
+        else:
+
+            def body(carry, xs, win=win):
+                x, aux = carry
+                pl, spl, bn = xs
+                x, aux_i, k, v, hfin = layer(x, pl, spl, bn, win)
+                ys = None
+                if collect_cache:
+                    kv = (k[:, -win:], v[:, -win:]) if win else (k, v)
+                    ys = (kv, hfin)
+                return (x, aux + aux_i), ys
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            (x, aux), ys = jax.lax.scan(body_fn, (x, aux), (sub_lay, sub_ssm, sub_bn))
+            if collect_cache:
+                kv, hfin = ys
+                tgt = kv_global if win == 0 else kv_swa
+                for i in range(end - start):
+                    tgt.append((kv[0][i], kv[1][i]))
+                    ssm_finals.append(hfin[i])
+
+    caches = None
+    if collect_cache:
+        caches = {
+            "k_global": jnp.stack([k for k, _ in kv_global]),
+            "v_global": jnp.stack([v for _, v in kv_global]),
+            "k_swa": jnp.stack([k for k, _ in kv_swa]),
+            "v_swa": jnp.stack([v for _, v in kv_swa]),
+            "ssm_h": jnp.stack(ssm_finals),
+        }
+    return output_logits(params, x, cfg, mesh), aux / cfg.n_layers, caches
+
+
+def _forward_grouped_cross(params, x, cond, cfg: ModelConfig, mesh, positions, collect_cache):
+    """VLM: unrolled cross-attn blocks between scanned self-attn groups."""
+    n_groups = cfg.num_cross_layers
+    per = cfg.n_layers // n_groups
+    lay = params["layers"]
+    aux = jnp.zeros((), jnp.float32)
+    kv_all = []
+
+    def self_body(carry, pl):
+        x, aux = carry
+        x, aux_i, k, v = _attn_block_train(
+            x, pl, cfg, mesh, positions, window=cfg.sliding_window
+        )
+        return (x, aux + aux_i), (k, v) if collect_cache else None
+
+    body_fn = jax.checkpoint(self_body) if cfg.remat else self_body
+    for gi in range(n_groups):
+        cl = jax.tree.map(lambda a: a[gi], params["cross_layers"])
+        x = _cross_block(x, cl, _cond_kv(cond, cl, cfg), cfg)
+        group = jax.tree.map(
+            lambda a: a[gi * per : (gi + 1) * per], lay
+        )
+        (x, aux), kv = jax.lax.scan(body_fn, (x, aux), group)
+        if collect_cache:
+            kv_all.append(kv)
+
+    caches = None
+    if collect_cache:
+        caches = {
+            "k": jnp.concatenate([kv[0] for kv in kv_all], axis=0),
+            "v": jnp.concatenate([kv[1] for kv in kv_all], axis=0),
+        }
+    return output_logits(params, x, cfg, mesh), aux / cfg.n_layers, caches
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, mesh=None):
+    """Next-token CE (+ router aux); returns (loss, metrics)."""
+    logits, aux, _ = forward(params, batch, cfg, mesh)
+    if cfg.n_codebooks > 1:
+        tgt = batch["targets"]  # (B, S, C)
+        mask = batch["mask"][..., None] * jnp.ones(
+            (1, 1, cfg.n_codebooks), jnp.float32
+        )
+        ce = cross_entropy_loss(logits, tgt, mask)
+    else:
+        ce = cross_entropy_loss(logits, batch["targets"], batch["mask"])
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"loss": loss, "ce": ce, "router_aux": aux}

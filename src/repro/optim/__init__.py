@@ -1,0 +1,9 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401
+from .compression import (  # noqa: F401
+    CompressionState,
+    compress_int8,
+    decompress_int8,
+    compressed_psum,
+    init_compression_state,
+)

@@ -1,0 +1,78 @@
+"""AdamW on raw pytrees, with global-norm clipping and dtype policies.
+
+The optimizer-state dtype is configurable per config: the 235B MoE
+config stores m/v in bf16 so (params + grads + m + v) fits a v5e pod's
+HBM (see DESIGN.md Sec. 4); small configs keep f32 states.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32  # bf16 for the largest configs
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=cfg.state_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Any, state: AdamWState, params: Any, cfg: AdamWConfig, lr: jax.Array
+) -> tuple[Any, AdamWState, dict[str, jax.Array]]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1.0 - b1) * g
+        v_new = b2 * v32 + (1.0 - b2) * g * g
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        p_new = p.astype(jnp.float32) - lr * (
+            update + cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return (
+            p_new.astype(p.dtype),
+            m_new.astype(cfg.state_dtype),
+            v_new.astype(cfg.state_dtype),
+        )
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_params, AdamWState(step, new_m, new_v), metrics

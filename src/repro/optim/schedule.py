@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(
+    step, peak: float, warmup_steps: int, total_steps: int, floor_frac: float = 0.1
+):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(1.0, warmup_steps)
+    prog = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0
+    )
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,39 @@
+"""Bit-slicing between B-bit integer magnitudes and Bc-bit cell levels.
+
+Signed mapping (paper Fig. 5(d)): w = w+ - w-, with exactly one of the
+pair nonzero (the other cell stays at HRS to encode zero).  Magnitudes
+split base-2^Bc, LSB slice first:  mag = sum_l (2^Bc)^l * s_l.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def signed_to_pair(q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Signed integers -> (positive, negative) magnitude planes."""
+    return jnp.maximum(q, 0), jnp.maximum(-q, 0)
+
+
+def pair_to_signed(pos: jax.Array, neg: jax.Array) -> jax.Array:
+    """Inverse of signed_to_pair (works on analog read-back values too)."""
+    return pos - neg
+
+
+def slice_magnitudes(mag: jax.Array, bc: int, k: int) -> jax.Array:
+    """(..., ) int magnitudes -> (..., k) cell levels, LSB slice first."""
+    base = 1 << bc
+    out = []
+    rem = mag.astype(jnp.int32)
+    for _ in range(k):
+        out.append(rem % base)
+        rem = rem // base
+    return jnp.stack(out, axis=-1)
+
+
+def unslice_magnitudes(slices: jax.Array, bc: int) -> jax.Array:
+    """(..., k) cell levels (analog OK) -> (...,) magnitudes."""
+    k = slices.shape[-1]
+    weights = jnp.asarray([float(1 << (bc * l)) for l in range(k)], slices.dtype)
+    return jnp.sum(slices * weights, axis=-1)

@@ -1,0 +1,78 @@
+"""Packing weight matrices into RRAM verify-columns and back.
+
+A weight matrix W (K_in, M_out) deploys onto crossbar arrays whose
+*physical columns* (the unit the WV engine programs: N cells sharing one
+TIA/ADC) run along the input dimension.  Layout:
+
+    (K, M) ->  pad K to multiple of N
+           ->  (K/N, N, M) chunks
+           ->  x2 polarities (pos/neg), x k slices
+           ->  columns (K/N * M * 2 * k, N)
+
+Columns are fully independent — at deployment scale they are sharded
+over the entire device mesh (see launch/program.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .bitslice import pair_to_signed, signed_to_pair, slice_magnitudes, unslice_magnitudes
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static metadata needed to invert the packing."""
+
+    k_in: int
+    m_out: int
+    n_cells: int
+    slices: int
+    bc: int
+
+    @property
+    def k_padded(self) -> int:
+        return -(-self.k_in // self.n_cells) * self.n_cells
+
+    @property
+    def num_columns(self) -> int:
+        return (self.k_padded // self.n_cells) * self.m_out * 2 * self.slices
+
+
+def pack_columns(
+    q: jax.Array, n_cells: int, bc: int, k_slices: int
+) -> tuple[jax.Array, PackedLayout]:
+    """Signed int weight matrix (K, M) -> target cell levels (C, N)."""
+    k_in, m_out = q.shape
+    layout = PackedLayout(k_in, m_out, n_cells, k_slices, bc)
+    pad = layout.k_padded - k_in
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+    pos, neg = signed_to_pair(q)
+    # (Kp, M, 2)
+    pair = jnp.stack([pos, neg], axis=-1)
+    # (Kp, M, 2, S)
+    cells = slice_magnitudes(pair, bc, k_slices)
+    # (Kp/N, N, M, 2, S) -> (Kp/N, M, 2, S, N) -> (C, N)
+    kp = layout.k_padded
+    cells = cells.reshape(kp // n_cells, n_cells, m_out, 2, k_slices)
+    cells = jnp.moveaxis(cells, 1, -1)
+    return cells.reshape(-1, n_cells).astype(jnp.float32), layout
+
+
+def unpack_columns(columns: jax.Array, layout: PackedLayout) -> jax.Array:
+    """Programmed cell levels (C, N) -> effective signed weights (K, M).
+
+    Accepts continuous (analog read-back) levels: slices recombine with
+    their binary weights and polarities subtract, so programming noise
+    propagates to the effective weight exactly as in the macro.
+    """
+    kp, n = layout.k_padded, layout.n_cells
+    cells = columns.reshape(kp // n, layout.m_out, 2, layout.slices, n)
+    cells = jnp.moveaxis(cells, -1, 1).reshape(kp, layout.m_out, 2, layout.slices)
+    mags = unslice_magnitudes(cells, layout.bc)  # (Kp, M, 2)
+    signed = pair_to_signed(mags[..., 0], mags[..., 1])
+    return signed[: layout.k_in]

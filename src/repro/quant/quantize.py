@@ -1,0 +1,51 @@
+"""Symmetric per-output-channel quantization of weight matrices.
+
+The paper stores B-bit signed weights on pos/neg RRAM column pairs
+(Fig. 2): each polarity holds the magnitude across k = B/Bc cell slices,
+so the integer magnitude range is [0, 2^B - 1] and signed weights live
+in [-(2^B - 1), 2^B - 1] with a per-channel scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    weight_bits: int = 6         # B
+    cell_bits: int = 3           # Bc
+    channel_axis: int = -1       # per-output-channel scales
+    clip_quantile: float = 1.0   # 1.0 = absmax scaling
+
+    @property
+    def q_max(self) -> int:
+        return (1 << self.weight_bits) - 1
+
+    @property
+    def slices(self) -> int:
+        assert self.weight_bits % self.cell_bits == 0
+        return self.weight_bits // self.cell_bits
+
+
+def quantize_weight(
+    w: jax.Array, cfg: QuantConfig
+) -> tuple[jax.Array, jax.Array]:
+    """float weights -> (int levels in [-q_max, q_max], per-channel scale)."""
+    axis = cfg.channel_axis % w.ndim
+    red = tuple(i for i in range(w.ndim) if i != axis)
+    if cfg.clip_quantile >= 1.0:
+        amax = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+    else:
+        amax = jnp.quantile(jnp.abs(w), cfg.clip_quantile, axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / cfg.q_max
+    q = jnp.clip(jnp.round(w / scale), -cfg.q_max, cfg.q_max)
+    return q.astype(jnp.int32), scale
+
+
+def dequantize_weight(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Integer (or programmed analog) levels -> float weights."""
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + decode steps and a request loop.
+
+`make_decode_step` / `make_prefill_step` build the pure step functions
+the dry-run lowers (decode_32k / long_500k lower the decode step with a
+pre-allocated cache; prefill_32k lowers the prefill step).  `ServeEngine`
+drives them for real batched generation (examples/serve_lm.py): greedy
+or temperature sampling, per-sequence stop handling, continuous token
+accounting, and RRAM-programmed weights served transparently (the paper
+deployment produces ordinary parameter pytrees).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step, init_cache, prefill
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, max_len: int | None = None):
+    def prefill_step(params, batch: dict):
+        return prefill(params, batch, cfg, mesh, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None, sample: bool = False):
+    def step(params, cache, batch: dict, key=None):
+        logits, cache = decode_step(params, cache, batch, cfg, mesh)
+        last = logits[:, -1] if logits.ndim == 3 else logits[:, -1, 0]
+        if sample and key is not None:
+            tok = jax.random.categorical(key, last.astype(jnp.float32), axis=-1)
+        else:
+            tok = jnp.argmax(last, axis=-1)
+        return tok.astype(jnp.int32), logits, cache
+
+    return step
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: Any
+    mesh: Any = None
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.mesh))
+        self._decode = jax.jit(
+            make_decode_step(self.cfg, self.mesh, sample=self.temperature > 0)
+        )
+
+    def generate(
+        self, tokens: jax.Array, max_new: int, key=None, eos_id: int | None = None
+    ) -> jax.Array:
+        """tokens: (B, S) prompt; returns (B, max_new) generated ids."""
+        b, s = tokens.shape
+        key = key if key is not None else jax.random.PRNGKey(0)
+        last, cache = self._prefill(self.params, {"tokens": tokens})
+        cur = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+        outs = [cur]
+        done = jnp.zeros((b,), bool)
+        for i in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            tok, _, cache = self._decode(self.params, cache, {"tokens": cur}, sub)
+            cur = tok[:, None]
+            if eos_id is not None:
+                done = done | (tok == eos_id)
+                if bool(jnp.all(done)):
+                    outs.append(cur)
+                    break
+            outs.append(cur)
+        return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,98 @@
+"""Train-step construction: loss + grad + AdamW on sharded pytrees."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .models import ModelConfig
+from .models.transformer import loss_fn
+from .optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: AdamWConfig) -> TrainState:
+    from .models import init_params
+
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    mesh=None,
+    schedule: Callable | None = None,
+    total_steps: int = 10000,
+    grad_accum: int = 1,
+):
+    """Returns train_step(state, batch) -> (state, metrics). Pure function
+    of its inputs — jit/shard it at the launch layer.
+
+    grad_accum > 1 splits the global batch into microbatches processed by
+    a lax.scan, dividing activation memory by the accumulation factor at
+    the cost of serialized microbatch compute (the standard big-model
+    trade; per-cell factors live in launch/dryrun.py)."""
+    if schedule is None:
+        schedule = lambda s: cosine_schedule(
+            s, opt_cfg.lr_peak, warmup_steps=min(500, total_steps // 10),
+            total_steps=total_steps,
+        )
+
+    def grads_of(params, batch):
+        def lf(p):
+            return loss_fn(p, batch, cfg, mesh)
+
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(state: TrainState, batch: dict):
+        # schedule indexed from 1: warmup must not zero the first step
+        lr = schedule(state.opt.step + 1)
+        if grad_accum == 1:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grads_of(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            m0 = {"loss": 0.0, "ce": 0.0, "router_aux": 0.0}
+            m0 = jax.tree.map(jnp.float32, m0)
+            (grads, metrics), _ = jax.lax.scan(body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m / grad_accum, metrics)
+        params, opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg, lr
+        )
+        metrics = {**metrics, **opt_metrics, "lr": lr}
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, mesh=None):
+    def eval_step(params, batch: dict):
+        _, metrics = loss_fn(params, batch, cfg, mesh)
+        return metrics
+
+    return eval_step

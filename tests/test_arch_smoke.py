@@ -1,0 +1,75 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates its REDUCED config and runs one forward + one train step on
+CPU, asserting output shapes and the absence of NaNs.  The FULL configs
+are exercised by the dry-run only."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import init_params
+from repro.models.transformer import forward, loss_fn
+from repro.optim import AdamWConfig
+from repro.training import init_train_state, make_train_step
+
+
+def _smoke_batch(cfg, B=2, S=16, with_labels=True):
+    key = jax.random.PRNGKey(0)
+    batch = {}
+    if cfg.frontend == "embed_stub":
+        batch["embeds"] = 0.02 * jax.random.normal(key, (B, S, cfg.d_model))
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.cross_kv_len:
+        batch["cond"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.cross_kv_len, cfg.cross_d_cond)
+        )
+    if with_labels:
+        tshape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+        batch["targets"] = jax.random.randint(
+            jax.random.fold_in(key, 2), tshape, 0, cfg.vocab_size
+        )
+        batch["mask"] = jnp.ones((B, S), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_full_config_well_formed(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers > 0 and cfg.vocab_size > 0
+    assert cfg.param_count() > 1e8, f"{arch} param count suspiciously small"
+    assert cfg.active_param_count() <= cfg.param_count()
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg, with_labels=False)
+    logits, aux, _ = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+    if cfg.n_codebooks > 1:
+        assert logits.shape == (2, 16, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits))), arch
+    assert jnp.isfinite(aux), arch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    opt = AdamWConfig(lr_peak=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, total_steps=10))
+    batch = _smoke_batch(cfg)
+    state2, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert float(metrics["grad_norm"]) > 0, arch
+    # parameters actually moved
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        state.params,
+        state2.params,
+    )
+    assert max(jax.tree.leaves(delta)) > 0, arch

@@ -1,0 +1,64 @@
+"""Circuit cost-model invariants (paper Table 1 / Sec. 5.3 structure)."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CircuitCost, WVConfig, WVMethod, default_config_for_array
+from repro.core.cost import read_phase_cost, write_phase_cost
+
+
+@pytest.fixture
+def cost():
+    return CircuitCost()
+
+
+def test_default_config_scaling():
+    c32, c64 = default_config_for_array(32), default_config_for_array(64)
+    assert c32.adc.bits == 9 and c64.adc.bits == 10
+    assert c64.tau_w == pytest.approx(2 * c32.tau_w)  # tau_w ~ N
+
+
+def test_read_cost_per_method_ordering(cost):
+    """Per verification sweep: compare-only < full-SAR latency; MRA pays
+    M x the HD-PV read cost; HARP adds only the tiny adder tail."""
+    lat, en = {}, {}
+    for m in WVMethod:
+        cfg = WVConfig(method=m)
+        lat[m], en[m] = (
+            float(x) for x in read_phase_cost(cfg, cost)
+        )
+    assert lat[WVMethod.CW_SC] < lat[WVMethod.HD_PV]
+    assert lat[WVMethod.HARP] < lat[WVMethod.HD_PV]
+    assert lat[WVMethod.MRA] == pytest.approx(5 * (lat[WVMethod.HD_PV] - cost.t_adder_ns))
+    assert en[WVMethod.MRA] == pytest.approx(
+        5 * (en[WVMethod.HD_PV] - 32 * cost.e_adder_hdpv_pj)
+    )
+    # ADC energy dominates (paper: >90% of WV energy is ADC activity)
+    cfg = WVConfig(method=WVMethod.HD_PV)
+    adc_only = cfg.n_cells * cfg.adc.e_sar_pj
+    assert adc_only / en[WVMethod.HD_PV] > 0.9
+
+
+def test_write_cost_column_parallel(cost):
+    """Phase latency is max-pulses (column-parallel), not sum; energy sums."""
+    cfg = WVConfig()
+    g = jnp.full((1, 32), 3.0)
+    n_p = jnp.zeros((1, 32)).at[0, 0].set(4.0).at[0, 1].set(2.0)
+    direction = jnp.zeros((1, 32)).at[0, 0].set(1.0).at[0, 1].set(-1.0)
+    lat, en = write_phase_cost(g, n_p, direction, cfg.device, cost)
+    # 4 SET pulses + 2 RESET pulses, phases serialized
+    assert float(lat[0]) == pytest.approx(cost.t_write_pulse_ns * (4 + 2))
+    assert float(en[0]) > 0
+    # doubling pulses doubles energy, latency follows the max
+    lat2, en2 = write_phase_cost(g, 2 * n_p, direction, cfg.device, cost)
+    assert float(en2[0]) == pytest.approx(2 * float(en[0]))
+    assert float(lat2[0]) == pytest.approx(2 * float(lat[0]))
+
+
+def test_harp_compare_count_affects_cost(cost):
+    cfg = WVConfig(method=WVMethod.HARP)
+    ones = jnp.ones((32,), jnp.int32)
+    lat1, en1 = read_phase_cost(cfg, cost, n_compares=ones)
+    lat2, en2 = read_phase_cost(cfg, cost, n_compares=2 * ones)
+    assert float(en2) > float(en1)
+    assert float(lat2) > float(lat1)

@@ -1,0 +1,89 @@
+"""Properties of the Hadamard read basis (paper Prop. 2.1 + eq. 7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hadamard as hd
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128])
+def test_sylvester_is_hadamard(n):
+    h = np.asarray(hd.hadamard_matrix(n))
+    assert hd.is_hadamard(h)
+    # row 0 all ones; every other row balanced (sums to zero) -> eq. (7)
+    assert np.all(h[0] == 1)
+    assert np.all(h[1:].sum(axis=1) == 0)
+
+
+@pytest.mark.parametrize("n", [8, 32, 64])
+def test_prop21_variance_bound(n):
+    """tr((A^T A)^-1) is minimized by Hadamard: identity gives N, H gives 1."""
+    h = np.asarray(hd.hadamard_matrix(n), dtype=np.float64)
+    tr_h = np.trace(np.linalg.inv(h.T @ h))
+    tr_i = np.trace(np.linalg.inv(np.eye(n)))
+    assert tr_h == pytest.approx(1.0, rel=1e-9)
+    assert tr_i == pytest.approx(n)
+    # a random +-1 matrix is never better than Hadamard
+    rng = np.random.RandomState(0)
+    for _ in range(5):
+        a = rng.choice([-1.0, 1.0], size=(n, n))
+        if abs(np.linalg.det(a)) < 1e-6:
+            continue
+        assert np.trace(np.linalg.inv(a.T @ a)) >= 1.0 - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    logn=st.integers(1, 7),
+    batch=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwht_matches_matmul(logn, batch, seed):
+    n = 1 << logn
+    x = np.random.RandomState(seed).randn(batch, n).astype(np.float32)
+    h = np.asarray(hd.hadamard_matrix(n))
+    np.testing.assert_allclose(
+        np.asarray(hd.fwht(jnp.asarray(x))), x @ h, rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(logn=st.integers(1, 7), seed=st.integers(0, 2**31 - 1))
+def test_encode_decode_roundtrip(logn, seed):
+    n = 1 << logn
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, n))
+    np.testing.assert_allclose(
+        np.asarray(hd.decode(hd.encode(x))), np.asarray(x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_uncorrelated_noise_variance_reduced_by_n():
+    """Decoded uncorrelated-noise variance ~ sigma^2/N (Prop. 2.1)."""
+    n, trials = 32, 20000
+    key = jax.random.PRNGKey(0)
+    noise = jax.random.normal(key, (trials, n))  # sigma = 1
+    decoded = hd.decode(noise)
+    var = float(jnp.var(decoded))
+    assert var == pytest.approx(1.0 / n, rel=0.1)
+
+
+def test_common_mode_cancellation_exact():
+    """mu_cm maps to cell 0 only: (1/N) H^T (mu * 1) = mu * e1 (eq. 7)."""
+    n = 32
+    mu = 3.7
+    decoded = np.asarray(hd.decode(jnp.full((1, n), mu)))
+    assert decoded[0, 0] == pytest.approx(mu, rel=1e-6)
+    np.testing.assert_allclose(decoded[0, 1:], 0.0, atol=1e-5)
+
+
+def test_identity_passes_common_mode_everywhere():
+    """Contrast: one-hot reads hand mu_cm to every cell unchanged."""
+    n = 32
+    mu = 3.7
+    # identity read: y = w + mu ; "decode" is identity
+    w = np.zeros(n)
+    y = w + mu
+    np.testing.assert_allclose(y, mu)  # all cells polluted

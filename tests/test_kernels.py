@@ -1,0 +1,110 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles.
+
+Kernels execute in interpret mode on CPU (same kernel body, Python
+evaluation) — the sweep validates BlockSpec/grid logic and numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.acim_vmm import ops as vmm_ops, ref as vmm_ref
+from repro.kernels.fwht import ops as fwht_ops, ref as fwht_ref
+from repro.kernels.fwht.fwht import fwht_pallas
+from repro.kernels.wv_step import ops as wv_ops, ref as wv_ref
+from repro.kernels.wv_step.ref import WVCellParams
+
+
+@pytest.mark.parametrize("n", [8, 16, 32, 64, 128])
+@pytest.mark.parametrize("c", [1, 17, 512, 1000])
+def test_fwht_shapes(n, c):
+    x = jax.random.normal(jax.random.PRNGKey(c * 1000 + n), (c, n))
+    np.testing.assert_allclose(
+        np.asarray(fwht_ops.fwht(x)),
+        np.asarray(fwht_ref.fwht(x)),
+        rtol=1e-4,
+        atol=1e-3,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32)).astype(dtype)
+    out = fwht_ops.fwht(x)
+    ref = fwht_ref.fwht(x.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref), rtol=2e-2, atol=2e-1
+    )
+
+
+@pytest.mark.parametrize("block_c", [64, 256, 1024])
+def test_fwht_block_sweep(block_c):
+    x = jax.random.normal(jax.random.PRNGKey(1), (300, 32))
+    out = fwht_pallas(x, block_c=block_c, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(fwht_ref.fwht(x)), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_fwht_large_n_falls_back():
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 256))
+    np.testing.assert_allclose(
+        np.asarray(fwht_ops.fwht(x)), np.asarray(fwht_ref.fwht(x)), rtol=1e-4, atol=1e-3
+    )
+
+
+def _wv_args(c, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    return (
+        jax.random.normal(ks[0], (c, n)) * 8,
+        jnp.abs(jax.random.normal(ks[1], (c, n))),
+        jax.random.uniform(ks[2], (c, n), minval=0, maxval=7),
+        jax.random.randint(ks[3], (c, n), 0, 3),
+        jax.random.bernoulli(ks[4], 0.3, (c, n)),
+        1 + 0.15 * jax.random.normal(ks[5], (c, n)),
+        0.05 * jax.random.normal(ks[6], (c, n)),
+        1 + 0.1 * jax.random.normal(ks[7], (c, n)),
+    )
+
+
+@pytest.mark.parametrize("c,n", [(16, 32), (300, 32), (128, 64), (64, 128)])
+@pytest.mark.parametrize("ternary", [True, False])
+@pytest.mark.parametrize("can_freeze", [True, False])
+def test_wv_step_sweep(c, n, ternary, can_freeze):
+    p = WVCellParams(
+        threshold=4.0 if ternary else 0.5, k_streak=2, can_freeze=can_freeze,
+        ternary=ternary, fine_step=0.25, max_pulses=16.0, g_max=7.0,
+        nonlinearity=0.35, reset_asymmetry=0.85,
+    )
+    args = _wv_args(c, n)
+    outs_k = wv_ops.wv_cell_update(*args, p)
+    outs_r = wv_ref.wv_cell_update(*args, p)
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_allclose(
+            np.asarray(a, dtype=np.float32),
+            np.asarray(b, dtype=np.float32),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+@pytest.mark.parametrize("b,k,m", [(8, 32, 64), (50, 32, 200), (128, 64, 128)])
+@pytest.mark.parametrize("slices", [1, 2])
+def test_acim_vmm_sweep(b, k, m, slices):
+    x = jax.random.normal(jax.random.PRNGKey(b), (b, k))
+    gp = jax.random.randint(jax.random.PRNGKey(k), (slices, k, m), 0, 8).astype(jnp.float32)
+    gn = jax.random.randint(jax.random.PRNGKey(m), (slices, k, m), 0, 8).astype(jnp.float32)
+    fs = float(k * 7)
+    yk = vmm_ops.acim_vmm(x, gp, gn, bc=3, adc_bits=10, full_scale=fs)
+    yr = vmm_ref.acim_vmm(x, gp, gn, 3, 10, fs)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-4, atol=1e-2)
+
+
+def test_acim_vmm_adc_saturates():
+    """Columns beyond the ADC full scale clamp (macro behaviour)."""
+    x = jnp.ones((1, 8)) * 100.0
+    gp = jnp.full((1, 8, 4), 7.0)
+    gn = jnp.zeros((1, 8, 4))
+    y = vmm_ops.acim_vmm(x, gp, gn, bc=3, adc_bits=9, full_scale=56.0)
+    assert float(jnp.max(y)) <= 28.0 + 1e-6

@@ -1,0 +1,124 @@
+"""Model-family correctness: decode path == training path, training works."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import SyntheticLM
+from repro.models import ModelConfig, forward, init_params, prefill, decode_step
+from repro.optim import AdamWConfig
+from repro.training import init_train_state, make_train_step
+
+V = 64
+FAMILIES = {
+    "dense": ModelConfig(
+        name="d", n_layers=3, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=V, qk_norm=True, dtype=jnp.float32,
+        attn_chunk_q=8, attn_chunk_kv=8, remat=False),
+    "rwkv6": ModelConfig(
+        name="r", n_layers=3, d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+        d_ff=64, vocab_size=V, block="rwkv6", pos_embedding="none",
+        dtype=jnp.float32, remat=False),
+    "hymba": ModelConfig(
+        name="h", n_layers=4, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=V, block="hymba", ssm_state=4, sliding_window=8,
+        global_layer_every=2, dtype=jnp.float32, attn_chunk_q=8,
+        attn_chunk_kv=8, remat=False),
+    "vlm": ModelConfig(
+        name="v", n_layers=4, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=V, cross_attn_every=2, cross_kv_len=6,
+        cross_d_cond=16, dtype=jnp.float32, attn_chunk_q=8, attn_chunk_kv=8,
+        remat=False),
+    "musicgen": ModelConfig(
+        name="m", n_layers=3, d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+        d_ff=64, vocab_size=V, frontend="embed_stub", n_codebooks=4,
+        pos_embedding="sinusoidal", cross_kv_len=6, cross_d_cond=16,
+        tie_embeddings=False, dtype=jnp.float32, attn_chunk_q=8,
+        attn_chunk_kv=8, remat=False),
+}
+
+
+def _batch(cfg, B=2, S=17):
+    full = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)}
+    if cfg.frontend == "embed_stub":
+        full = {"embeds": jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))}
+    if cfg.cross_kv_len:
+        full["cond"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.cross_kv_len, cfg.cross_d_cond)
+        )
+    return full
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_decode_matches_forward(family):
+    cfg = FAMILIES[family]
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    S = 17
+    full = _batch(cfg, S=S)
+    logits_full, _, _ = forward(params, full, cfg)
+    pre = {k: (v[:, : S - 1] if k in ("tokens", "embeds") else v) for k, v in full.items()}
+    _, cache = prefill(params, pre, cfg, max_len=S + 4)
+    step = {k: (v[:, S - 1 : S] if k in ("tokens", "embeds") else v) for k, v in full.items()}
+    lg, cache = decode_step(params, cache, step, cfg)
+    a, b = np.asarray(logits_full[:, -1]), np.asarray(lg[:, 0])
+    rel = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert rel < 2e-3, (family, rel)
+    assert int(cache["pos"][0]) == S - 1
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_multi_step_decode_no_nan(family):
+    cfg = FAMILIES[family]
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    full = _batch(cfg, S=9)
+    _, cache = prefill(params, full, cfg, max_len=16)
+    jit_step = jax.jit(lambda p, c, b: decode_step(p, c, b, cfg))
+    step = {
+        k: (v[:, -1:] if k in ("tokens", "embeds") else v)
+        for k, v in full.items()
+    }
+    for _ in range(5):
+        lg, cache = jit_step(params, cache, step)
+        assert not bool(jnp.any(jnp.isnan(lg)))
+
+
+def test_training_reduces_loss_dense():
+    """Converges toward the bigram entropy floor: uniform ln(64)=4.16,
+    optimal ln(16)=2.77."""
+    cfg = ModelConfig(
+        name="d2", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=64, dtype=jnp.float32, attn_chunk_q=16,
+        attn_chunk_kv=16, remat=False)
+    data = SyntheticLM(vocab_size=64, seq_len=32, global_batch=16, seed=2)
+    opt = AdamWConfig(lr_peak=1e-2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, total_steps=150))
+    losses = []
+    for i in range(150):
+        state, m = step(state, data.global_batch_at(i)._asdict())
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < 3.4, (losses[0], losses[-1])  # well below uniform 4.16
+
+
+def test_gradients_flow_everywhere_rwkv():
+    """No dead parameters: every leaf receives nonzero gradient."""
+    cfg = FAMILIES["rwkv6"]
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    from repro.models.transformer import loss_fn
+
+    batch = {
+        **_batch(cfg, S=16),
+        "targets": jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, V),
+        "mask": jnp.ones((2, 16), jnp.float32),
+    }
+    grads = jax.grad(lambda p: loss_fn(p, batch, cfg)[0])(params)
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads)
+    dead = [
+        jax.tree_util.keystr(path)
+        for path, g in flat
+        if float(jnp.max(jnp.abs(g))) == 0.0
+    ]
+    # bonus_u may legitimately be near-zero early; everything else must live
+    assert all("bonus_u" in d or "decay" in d for d in dead), dead

@@ -1,0 +1,66 @@
+"""Quantization / bit-slicing / packing properties (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    QuantConfig,
+    dequantize_weight,
+    pack_columns,
+    pair_to_signed,
+    quantize_weight,
+    signed_to_pair,
+    slice_magnitudes,
+    unpack_columns,
+    unslice_magnitudes,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 80),
+    m=st.integers(1, 40),
+)
+def test_pack_unpack_roundtrip(seed, k, m):
+    q = np.random.RandomState(seed).randint(-63, 64, size=(k, m))
+    cols, layout = pack_columns(jnp.asarray(q), n_cells=32, bc=3, k_slices=2)
+    assert cols.shape[1] == 32
+    assert layout.num_columns == cols.shape[0]
+    back = np.asarray(unpack_columns(cols, layout))
+    np.testing.assert_array_equal(q, back)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bc=st.sampled_from([1, 2, 3]), kq=st.integers(1, 4))
+def test_slice_unslice(seed, bc, kq):
+    hi = (1 << (bc * kq)) - 1
+    mag = np.random.RandomState(seed).randint(0, hi + 1, size=(37,))
+    s = slice_magnitudes(jnp.asarray(mag), bc, kq)
+    assert int(jnp.max(s)) < (1 << bc)
+    back = np.asarray(unslice_magnitudes(s.astype(jnp.float32), bc))
+    np.testing.assert_array_equal(mag, back)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_signed_pair_one_hot_hrs(seed):
+    """Exactly one of (pos, neg) is nonzero per weight (HRS encodes zero)."""
+    q = np.random.RandomState(seed).randint(-63, 64, size=(50,))
+    pos, neg = signed_to_pair(jnp.asarray(q))
+    assert bool(jnp.all((pos == 0) | (neg == 0)))
+    np.testing.assert_array_equal(np.asarray(pair_to_signed(pos, neg)), q)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize_error_bound(seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 16)) * 0.05
+    cfg = QuantConfig()
+    q, scale = quantize_weight(w, cfg)
+    wq = dequantize_weight(q, scale)
+    # error bounded by half a quant step per channel
+    assert bool(jnp.all(jnp.abs(wq - w) <= 0.5 * scale + 1e-9))
+    assert int(jnp.max(jnp.abs(q))) <= cfg.q_max

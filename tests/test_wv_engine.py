@@ -1,0 +1,128 @@
+"""Write-and-verify engine behaviour (paper Secs. 3-5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceConfig,
+    NoiseConfig,
+    WVConfig,
+    WVMethod,
+    program_columns,
+)
+from repro.core.wv import verify_sweep
+
+
+@pytest.fixture(scope="module")
+def targets():
+    return jax.random.randint(jax.random.PRNGKey(0), (128, 32), 0, 8).astype(
+        jnp.float32
+    )
+
+
+def _run(cfg, targets, seed=1):
+    return jax.jit(lambda k, t: program_columns(k, t, cfg))(
+        jax.random.PRNGKey(seed), targets
+    )
+
+
+@pytest.mark.parametrize("method", list(WVMethod))
+def test_each_method_converges(method, targets):
+    cfg = WVConfig(method=method)
+    g, st = _run(cfg, targets)
+    assert float(jnp.mean(st.rms_error_lsb)) < 1.2, method
+    assert float(jnp.mean(st.frozen_frac)) > 0.9
+    assert float(jnp.min(st.latency_ns)) > 0
+    assert float(jnp.min(st.energy_pj)) > 0
+    assert not bool(jnp.any(jnp.isnan(g)))
+
+
+def test_paper_ordering(targets):
+    """Fig. 9: HD-PV best error+iters; HARP between HD-PV and CW-SC;
+    HARP lowest energy; MRA highest energy."""
+    res = {
+        m: _run(WVConfig(method=m), targets)[1]
+        for m in WVMethod
+    }
+    err = {m: float(jnp.mean(s.rms_error_lsb)) for m, s in res.items()}
+    its = {m: float(jnp.mean(s.iterations)) for m, s in res.items()}
+    en = {m: float(jnp.mean(s.energy_pj)) for m, s in res.items()}
+    assert err[WVMethod.HD_PV] < err[WVMethod.HARP] < err[WVMethod.CW_SC]
+    assert its[WVMethod.HD_PV] < its[WVMethod.HARP] < its[WVMethod.CW_SC]
+    assert en[WVMethod.HARP] < en[WVMethod.HD_PV] < en[WVMethod.MRA]
+
+
+def test_low_noise_near_exact(targets):
+    """With tiny read noise and a quiet device, every method lands within
+    the 0.5 LSB decision band."""
+    dev = DeviceConfig(sigma_map_frac=0.005, sigma_c2c_frac=0.01, sigma_d2d_frac=0.01)
+    noise = NoiseConfig(sigma_read_lsb=0.01)
+    for m in (WVMethod.CW_SC, WVMethod.HD_PV, WVMethod.HARP):
+        g, st = _run(WVConfig(method=m, device=dev, noise=noise), targets)
+        assert float(jnp.mean(st.rms_error_lsb)) < 0.45, m
+
+
+def test_noise_hurts_cwsc_more_than_hdpv(targets):
+    out = {}
+    for sig in (0.1, 0.7):
+        for m in (WVMethod.CW_SC, WVMethod.HD_PV):
+            _, st = _run(WVConfig(method=m, noise=NoiseConfig(sigma_read_lsb=sig)), targets)
+            out[(sig, m)] = float(jnp.mean(st.rms_error_lsb))
+    degr_cw = out[(0.7, WVMethod.CW_SC)] / out[(0.1, WVMethod.CW_SC)]
+    degr_hd = out[(0.7, WVMethod.HD_PV)] / out[(0.1, WVMethod.HD_PV)]
+    assert degr_cw > degr_hd
+
+
+def test_common_mode_immunity(targets):
+    """rho = 0.5 at fixed total power: Hadamard decode cancels mu_cm for
+    N-1 cells, so HD-PV degrades less than MRA."""
+    res = {}
+    for rho in (0.0, 0.5):
+        for m in (WVMethod.MRA, WVMethod.HD_PV):
+            _, st = _run(
+                WVConfig(method=m, noise=NoiseConfig(0.7, rho)), targets, seed=3
+            )
+            res[(rho, m)] = float(jnp.mean(st.rms_error_lsb))
+    assert res[(0.5, WVMethod.HD_PV)] <= res[(0.5, WVMethod.MRA)] * 1.05
+
+
+def test_verify_sweep_detects_single_error():
+    n = 32
+    t = jnp.full((1, n), 3.0)
+    g = t.at[0, 7].add(1.5)
+    for m in (WVMethod.CW_SC, WVMethod.HD_PV, WVMethod.HARP):
+        cfg = WVConfig(method=m, noise=NoiseConfig(sigma_read_lsb=0.0))
+        d, mag, _ = verify_sweep(jax.random.PRNGKey(0), g, t, cfg)
+        d = np.asarray(d[0])
+        assert d[7] == 1.0, m                 # too high -> RESET indicated
+        assert np.all(d[np.arange(n) != 7] == 0), m
+
+
+def test_harp_tau_tradeoff(targets):
+    """Paper Sec 5.1: larger tau freezes earlier (fewer iterations, more
+    error); smaller tau improves error at iteration cost."""
+    lo = _run(WVConfig(method=WVMethod.HARP, tau_w=2.0), targets)[1]
+    hi = _run(WVConfig(method=WVMethod.HARP, tau_w=10.0), targets)[1]
+    assert float(jnp.mean(hi.iterations)) < float(jnp.mean(lo.iterations))
+    assert float(jnp.mean(hi.rms_error_lsb)) > float(jnp.mean(lo.rms_error_lsb))
+
+
+def test_mra_reads_cost_scales():
+    t = jax.random.randint(jax.random.PRNGKey(5), (64, 32), 0, 8).astype(jnp.float32)
+    _, s3 = _run(WVConfig(method=WVMethod.MRA, mra_reads=3), t)
+    _, s7 = _run(WVConfig(method=WVMethod.MRA, mra_reads=7), t)
+    per3 = float(jnp.mean(s3.reads / jnp.maximum(s3.iterations, 1)))
+    per7 = float(jnp.mean(s7.reads / jnp.maximum(s7.iterations, 1)))
+    assert per3 == pytest.approx(3 * 32, rel=0.01)
+    assert per7 == pytest.approx(7 * 32, rel=0.01)
+
+
+def test_deterministic_given_key(targets):
+    cfg = WVConfig(method=WVMethod.HARP)
+    g1, s1 = _run(cfg, targets, seed=9)
+    g2, s2 = _run(cfg, targets, seed=9)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+    g3, _ = _run(cfg, targets, seed=10)
+    assert not np.array_equal(np.asarray(g1), np.asarray(g3))
