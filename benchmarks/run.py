@@ -12,6 +12,7 @@ def main() -> None:
         fig10_robustness,
         fig12_iso_footprint,
         fig13_latency_energy,
+        retention_refresh,
         table2_prior_work,
         kernels_bench,
     )
@@ -27,6 +28,7 @@ def main() -> None:
     fig13_latency_energy.main(32)
     fig13_latency_energy.main(64)
     table2_prior_work.main()
+    retention_refresh.main()
     kernels_bench.main()
     print(f"benchmarks.total,{(time.time() - t0) * 1e6:.0f},all-passed")
 

@@ -9,7 +9,19 @@ plus aggregate WV statistics (latency / energy / iterations), so a
 trained checkpoint can be "burned" onto simulated RRAM with CW-SC, MRA,
 HD-PV, or HARP and then served to measure end-task robustness.
 
-Deployment policy (documented in DESIGN.md):
+Two deployment paths share one programming core (`_program_leaf`):
+
+* `deploy_params` / `deploy_matrix` — the original "collapse to dense"
+  path: program, read back, return an ordinary parameter pytree.  The
+  array state is discarded; conductances are frozen forever.
+* `deploy_arrays` — the persistent path (DESIGN.md Sec. 9): returns a
+  `DeployedModel` that keeps per-leaf `ArrayState` (programmed
+  conductances `g`, integer `targets`, static `d2d` efficiencies, quant
+  `scale`, pack `layout`) alive, plus `materialize()` to rebuild dense
+  params on demand.  This is what `repro.lifetime` ages, verifies, and
+  refreshes: conductances are *state*, not a one-shot output.
+
+Deployment policy (documented in DESIGN.md Sec. 3):
 * >=2D weight leaves go to RRAM (flattened to (K, M) on the last axis);
 * 1D leaves (norm scales, biases) stay digital — they are tiny and in
   real ACiM macros live in SRAM next to the shift-and-add periphery;
@@ -36,12 +48,21 @@ from repro.quant import (
     quantize_weight,
     unpack_columns,
 )
+from repro.quant.pack import PackedLayout
 
+from . import device as dev_mod
 from .cost import CircuitCost
 from .types import WVConfig
 from .wv import WVStats, program_columns
 
-__all__ = ["DeployReport", "deploy_params", "deploy_matrix"]
+__all__ = [
+    "ArrayState",
+    "DeployReport",
+    "DeployedModel",
+    "deploy_arrays",
+    "deploy_params",
+    "deploy_matrix",
+]
 
 
 @dataclasses.dataclass
@@ -83,6 +104,101 @@ class DeployReport:
         self.total_energy_pj += en
 
 
+@dataclasses.dataclass
+class ArrayState:
+    """Persistent programmed state of one weight leaf on RRAM.
+
+    `g` is the *live* analog conductance of every cell (LSB units) — the
+    lifetime subsystem mutates it (drift, refresh) by assigning a new
+    array; everything else is fixed at deployment: `targets` are the
+    intended integer levels (the refresh target), `d2d` the static
+    per-cell step-efficiency (a device property, so re-programming the
+    same physical array must reuse it), `scale`/`layout`/`shape`/`dtype`
+    invert the quantize/pack transform.
+    """
+
+    g: jax.Array              # (C, N) programmed analog levels, LSB
+    targets: jax.Array        # (C, N) integer target levels, LSB
+    d2d: jax.Array            # (C, N) static per-cell step efficiency
+    scale: jax.Array          # per-channel quantization scale
+    layout: PackedLayout
+    shape: tuple[int, ...]    # original leaf shape
+    dtype: Any
+
+    def materialize(self, dtype: Any | None = None) -> jax.Array:
+        """Programmed conductances -> effective dense weight leaf.
+
+        `dtype` overrides the stored leaf dtype (deploy_matrix reads
+        back in float32 regardless of the input dtype, so the analog
+        error is not additionally rounded to a low-precision mantissa).
+        """
+        q = unpack_columns(self.g, self.layout)
+        w = dequantize_weight(q, self.scale).reshape(self.shape)
+        return w.astype(self.dtype if dtype is None else dtype)
+
+
+@dataclasses.dataclass
+class DeployedModel:
+    """A parameter pytree whose matmul leaves live on simulated RRAM.
+
+    State-ownership contract (DESIGN.md Sec. 9): this object owns the
+    analog array state.  Consumers (serving) never touch `g` directly —
+    they call `materialize()` for a dense snapshot; producers (the
+    lifetime simulator, refresh policies) advance `g` via
+    `update_array`.  Digital leaves (norms, biases, embeddings) are kept
+    verbatim and merged back at materialization.
+    """
+
+    treedef: Any
+    leaves: list              # digital leaves verbatim; RRAM slots hold None
+    slots: dict[str, int]     # leaf name -> index into `leaves`
+    arrays: dict[str, ArrayState]
+    wv_cfg: WVConfig
+    cost: CircuitCost
+
+    def materialize(self) -> Any:
+        """Rebuild the full dense parameter pytree from current `g`."""
+        leaves = list(self.leaves)
+        for name, state in self.arrays.items():
+            leaves[self.slots[name]] = state.materialize()
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def update_array(self, name: str, g: jax.Array) -> None:
+        """Swap in aged/refreshed conductances for one leaf."""
+        self.arrays[name] = dataclasses.replace(self.arrays[name], g=g)
+
+    @property
+    def num_columns(self) -> int:
+        return sum(int(a.g.shape[0]) for a in self.arrays.values())
+
+
+def _program_leaf(
+    key: jax.Array,
+    w: jax.Array,
+    wv_cfg: WVConfig,
+    q_cfg: QuantConfig,
+    cost: CircuitCost | None,
+) -> tuple[ArrayState, WVStats]:
+    """Quantize, pack, and program one weight leaf; keep the array state.
+
+    The d2d field is sampled here from the same key split
+    `program_columns` would use internally, so dense-path results are
+    bit-identical to the pre-`ArrayState` implementation.
+    """
+    shape = w.shape
+    w2 = w.reshape((-1, shape[-1]))
+    q, scale = quantize_weight(w2, q_cfg)
+    cols, layout = pack_columns(q, wv_cfg.n_cells, q_cfg.cell_bits, q_cfg.slices)
+    k_d2d, _, _ = jax.random.split(key, 3)
+    d2d = dev_mod.sample_d2d(k_d2d, cols.shape, wv_cfg.device)
+    g, stats = program_columns(key, cols, wv_cfg, cost=cost, d2d=d2d)
+    state = ArrayState(
+        g=g, targets=cols, d2d=d2d, scale=scale, layout=layout,
+        shape=shape, dtype=w.dtype,
+    )
+    return state, stats
+
+
 def deploy_matrix(
     key: jax.Array,
     w: jax.Array,
@@ -95,14 +211,74 @@ def deploy_matrix(
         q_cfg = QuantConfig(
             weight_bits=wv_cfg.weight_bits, cell_bits=wv_cfg.device.bc
         )
-    shape = w.shape
-    w2 = w.reshape((-1, shape[-1]))
-    q, scale = quantize_weight(w2, q_cfg)
-    cols, layout = pack_columns(q, wv_cfg.n_cells, q_cfg.cell_bits, q_cfg.slices)
-    g, stats = program_columns(key, cols, wv_cfg, cost=cost)
-    q_prog = unpack_columns(g, layout)  # analog effective levels
-    w_prog = dequantize_weight(q_prog, scale).reshape(shape)
-    return w_prog, stats
+    state, stats = _program_leaf(key, w, wv_cfg, q_cfg, cost)
+    return state.materialize(dtype=jnp.float32), stats
+
+
+def _eligible_leaves(
+    params: Any,
+    deploy_embeddings: bool,
+    predicate: Callable[[str, jax.Array], bool] | None,
+):
+    """Flatten params and yield (index, name, leaf, eligible)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    records = []
+    for i, (path, leaf) in enumerate(flat):
+        name = jax.tree_util.keystr(path)
+        eligible = hasattr(leaf, "ndim") and leaf.ndim >= 2
+        if eligible and not deploy_embeddings and "embed" in name.lower():
+            eligible = False
+        if eligible and predicate is not None:
+            eligible = predicate(name, leaf)
+        records.append((i, name, leaf, eligible))
+    return records, treedef
+
+
+def deploy_arrays(
+    key: jax.Array,
+    params: Any,
+    wv_cfg: WVConfig,
+    q_cfg: QuantConfig | None = None,
+    cost: CircuitCost | None = None,
+    *,
+    deploy_embeddings: bool = False,
+    predicate: Callable[[str, jax.Array], bool] | None = None,
+) -> tuple[DeployedModel, DeployReport]:
+    """Program every eligible weight leaf, keeping persistent array state.
+
+    Returns (DeployedModel, DeployReport).  Same eligibility policy as
+    `deploy_params`; `DeployedModel.materialize()` reproduces exactly
+    what `deploy_params` would have returned for the same key.
+    """
+    if q_cfg is None:
+        q_cfg = QuantConfig(
+            weight_bits=wv_cfg.weight_bits, cell_bits=wv_cfg.device.bc
+        )
+    if cost is None:
+        cost = CircuitCost()
+    report = DeployReport()
+    records, treedef = _eligible_leaves(params, deploy_embeddings, predicate)
+    leaves: list = []
+    slots: dict[str, int] = {}
+    arrays: dict[str, ArrayState] = {}
+    for i, name, leaf, eligible in records:
+        if not eligible:
+            leaves.append(leaf)
+            continue
+        state, stats = _program_leaf(
+            jax.random.fold_in(key, i), leaf, wv_cfg, q_cfg, cost
+        )
+        report.merge(name, stats, wv_cfg.n_cells)
+        slots[name] = len(leaves)
+        arrays[name] = state
+        leaves.append(None)
+    return (
+        DeployedModel(
+            treedef=treedef, leaves=leaves, slots=slots, arrays=arrays,
+            wv_cfg=wv_cfg, cost=cost,
+        ),
+        report,
+    )
 
 
 def deploy_params(
@@ -120,23 +296,25 @@ def deploy_params(
     Returns (programmed_params, DeployReport).  Eligibility: ndim >= 2,
     plus the optional `predicate(path, leaf)`; embedding-like leaves
     (path contains 'embed') follow `deploy_embeddings`.
+
+    This is the dense one-shot path: array state is collapsed to weights
+    immediately.  Use `deploy_arrays` when the conductances must stay
+    live (lifetime simulation, refresh).
     """
+    if q_cfg is None:
+        q_cfg = QuantConfig(
+            weight_bits=wv_cfg.weight_bits, cell_bits=wv_cfg.device.bc
+        )
     report = DeployReport()
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    records, treedef = _eligible_leaves(params, deploy_embeddings, predicate)
     out = []
-    for i, (path, leaf) in enumerate(flat):
-        name = jax.tree_util.keystr(path)
-        eligible = hasattr(leaf, "ndim") and leaf.ndim >= 2
-        if eligible and not deploy_embeddings and "embed" in name.lower():
-            eligible = False
-        if eligible and predicate is not None:
-            eligible = predicate(name, leaf)
+    for i, name, leaf, eligible in records:
         if not eligible:
             out.append(leaf)
             continue
-        w_prog, stats = deploy_matrix(
+        state, stats = _program_leaf(
             jax.random.fold_in(key, i), leaf, wv_cfg, q_cfg, cost
         )
         report.merge(name, stats, wv_cfg.n_cells)
-        out.append(w_prog.astype(leaf.dtype))
+        out.append(state.materialize().astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out), report

@@ -3,12 +3,26 @@
 Defined as functions (never module-level constants) so importing this
 module never touches jax device state — required because the dry-run
 must set XLA_FLAGS before any jax initialization.
+
+`AxisType` landed in jax 0.5 (explicit-sharding API); on older jax the
+axis-type kwarg simply doesn't exist and every mesh axis is implicitly
+Auto, so we pass it only when available.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+
+except ImportError:  # jax < 0.5: Auto is the only (implicit) behaviour
+
+    def _axis_kwargs(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,9 +30,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     (2 pods = 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2, pods: int = 0):
@@ -28,8 +40,6 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, pods: int = 0):
         return jax.make_mesh(
             (pods, n_data, n_model),
             ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
+            **_axis_kwargs(3),
         )
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return jax.make_mesh((n_data, n_model), ("data", "model"), **_axis_kwargs(2))

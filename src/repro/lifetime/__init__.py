@@ -1,0 +1,22 @@
+# Post-programming device dynamics + verify-driven refresh scheduling:
+# a deployed model's conductances are state that ages (relaxation, drift,
+# read disturb, endurance wear) and gets scrubbed back — see DESIGN.md
+# Sec. 9 for the architecture and state-ownership contract.
+from .drift import (  # noqa: F401
+    CellState,
+    DriftConfig,
+    advance,
+    effective_d2d,
+    init_cell_state,
+    reset_programmed,
+    wear_efficiency,
+)
+from .refresh import (  # noqa: F401
+    RefreshConfig,
+    RefreshOutcome,
+    RefreshPolicy,
+    apply_refresh,
+    default_flag_params,
+    flag_columns,
+)
+from .service import EpochRecord, LifetimeReport, LifetimeSimulator  # noqa: F401

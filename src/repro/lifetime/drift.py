@@ -1,0 +1,252 @@
+"""Temporal RRAM device dynamics: relaxation, drift, disturb, wear.
+
+The WV engine (core.wv) models *programming-time* noise only; this
+module models what happens to a programmed conductance *afterwards*,
+so a deployed model can be aged and re-verified (DESIGN.md Sec. 9).
+Four effects, all in cell-LSB units:
+
+1. **Post-programming relaxation** (arXiv:2301.08516): within minutes of
+   the final pulse the filament partially relaxes toward a per-cell
+   equilibrium.  We model the equilibrium as the programmed level pulled
+   fractionally toward mid-scale (cells near the rails relax hardest)
+   plus a static per-cell offset, and the approach as exponential
+   settling with time constant `tau_relax_s`.
+2. **Log-time drift**: the classic conductance decay
+   g(t) = g(t_p) * ((t + t0) / (t_p + t0))^-nu, with a static per-cell
+   drift exponent nu (dispersion sampled at program time).  Advancing
+   from age a to a + dt multiplies by ((a + dt + t0)/(a + t0))^-nu, so
+   repeated small steps compose exactly to one large step.
+3. **Read disturb**: every ACiM read stresses the whole column with a
+   sub-switching voltage; accumulated reads nudge conductance SET-ward
+   by `read_disturb_lsb` per read (deterministic, first-order).
+4. **Endurance wear**: each write pulse consumes cycle budget.  Step
+   efficiency degrades smoothly as (1 + cycles/endurance)^-wear_exponent
+   (monotone in cycles), and a cell whose cycle count crosses its
+   per-cell sampled limit becomes *stuck*: it no longer responds to
+   programming or drift (a formed/ruptured filament frozen in place).
+
+`advance` is pure ((key, state, dt, reads) -> state) and shape-stable,
+so it drops into `jax.lax.scan` for long horizons; `LifetimeSimulator`
+(service.py) calls it per epoch from Python instead, interleaved with
+refresh decisions that change column subsets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import DeviceConfig
+
+__all__ = [
+    "DriftConfig",
+    "CellState",
+    "init_cell_state",
+    "advance",
+    "wear_efficiency",
+    "effective_d2d",
+    "reset_programmed",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Post-programming dynamics parameters (cell-LSB / seconds)."""
+
+    # Relaxation (minutes-scale, arXiv:2301.08516 Fig. 2 shape).
+    tau_relax_s: float = 120.0       # exponential settling time constant
+    relax_frac: float = 0.05         # equilibrium pull toward mid-scale
+    sigma_relax_lsb: float = 0.10    # static per-cell equilibrium offset std
+    # Log-time drift.
+    nu_drift: float = 0.01           # mean drift exponent
+    sigma_nu_frac: float = 0.8       # per-cell dispersion of nu (lognormal-ish)
+    t0_s: float = 30.0               # drift reference time (merges the
+                                     # sub-t0 transient into relaxation)
+    # Read disturb (SET-ward, per accumulated column read).
+    read_disturb_lsb: float = 1e-7
+    # Endurance wear.
+    endurance_cycles: float = 1e6    # median cycles-to-failure
+    sigma_endurance_dec: float = 0.3 # lognormal spread, decades
+    wear_exponent: float = 1.0       # step-efficiency decay power
+
+    def replace(self, **kw) -> "DriftConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class CellState(NamedTuple):
+    """Aging state of a batch of columns (leading shape (C, N) / (C, 1)).
+
+    A NamedTuple of arrays = a pytree: scan-able, jit-able, shardable on
+    the column axis like everything else in the WV stack.
+    """
+
+    g: jax.Array        # (C, N) live analog conductance, LSB
+    g_eq: jax.Array     # (C, N) relaxation equilibrium, LSB
+    nu: jax.Array       # (C, N) static per-cell drift exponent
+    d2d: jax.Array      # (C, N) static per-cell step efficiency (pristine)
+    age_s: jax.Array    # (C, 1) seconds since the column's last program
+    reads: jax.Array    # (C, 1) accumulated column reads since last program
+    cycles: jax.Array   # (C, N) lifetime write pulses seen by each cell
+    limit: jax.Array    # (C, N) per-cell cycles-to-failure
+    stuck: jax.Array    # (C, N) bool: cell no longer switches
+
+
+def _sample_equilibrium(
+    key: jax.Array, g: jax.Array, dev: DeviceConfig, cfg: DriftConfig
+) -> jax.Array:
+    """Per-cell relaxation equilibrium for freshly programmed levels."""
+    g_mid = 0.5 * dev.g_max_lsb
+    offset = cfg.sigma_relax_lsb * jax.random.normal(key, g.shape, jnp.float32)
+    return jnp.clip(
+        g + cfg.relax_frac * (g_mid - g) + offset, 0.0, dev.g_max_lsb
+    )
+
+
+def _sample_nu(key: jax.Array, shape, cfg: DriftConfig) -> jax.Array:
+    """Static per-cell drift exponent, strictly positive."""
+    spread = jnp.exp(
+        cfg.sigma_nu_frac * jax.random.normal(key, shape, jnp.float32)
+        - 0.5 * cfg.sigma_nu_frac**2
+    )
+    return cfg.nu_drift * spread
+
+
+def init_cell_state(
+    key: jax.Array,
+    g: jax.Array,
+    d2d: jax.Array,
+    dev: DeviceConfig,
+    cfg: DriftConfig,
+    initial_cycles: jax.Array | float = 0.0,
+) -> CellState:
+    """Aging state for freshly programmed conductances `g` (C, N)."""
+    c = g.shape[0]
+    k_eq, k_nu, k_lim = jax.random.split(key, 3)
+    limit = cfg.endurance_cycles * jnp.power(
+        10.0,
+        cfg.sigma_endurance_dec
+        * jax.random.normal(k_lim, g.shape, jnp.float32),
+    )
+    cycles = jnp.broadcast_to(
+        jnp.asarray(initial_cycles, jnp.float32), g.shape
+    ).astype(jnp.float32)
+    return CellState(
+        g=g.astype(jnp.float32),
+        g_eq=_sample_equilibrium(k_eq, g, dev, cfg),
+        nu=_sample_nu(k_nu, g.shape, cfg),
+        d2d=d2d.astype(jnp.float32),
+        age_s=jnp.zeros((c, 1), jnp.float32),
+        reads=jnp.zeros((c, 1), jnp.float32),
+        cycles=cycles,
+        limit=limit,
+        stuck=cycles > limit,
+    )
+
+
+def wear_efficiency(cycles: jax.Array, cfg: DriftConfig) -> jax.Array:
+    """Step-efficiency multiplier after `cycles` write pulses.
+
+    1.0 for a pristine cell, monotonically decreasing, never negative:
+    (1 + cycles/endurance)^-wear_exponent.  Multiplies the static d2d
+    efficiency wherever pulses are applied (refresh re-programming).
+    """
+    return jnp.power(
+        1.0 + cycles / cfg.endurance_cycles, -cfg.wear_exponent
+    )
+
+
+def effective_d2d(state: CellState, cfg: DriftConfig) -> jax.Array:
+    """Current per-cell step efficiency: pristine d2d degraded by wear."""
+    return state.d2d * wear_efficiency(state.cycles, cfg)
+
+
+def advance(
+    key: jax.Array,
+    state: CellState,
+    dt_s: jax.Array | float,
+    reads: jax.Array | float,
+    dev: DeviceConfig,
+    cfg: DriftConfig,
+) -> CellState:
+    """Age all columns by `dt_s` seconds with `reads` column reads.
+
+    Pure and deterministic under a fixed key; `reads` may be a scalar or
+    a (C, 1) per-column count (every ACiM read senses the whole column).
+    The key only feeds *future* extensions (e.g. RTN); the current four
+    effects are deterministic given the state, which is what makes a
+    Hadamard verify sweep a faithful drift detector.
+    """
+    del key  # all current dynamics are deterministic given state
+    dt = jnp.asarray(dt_s, jnp.float32)
+    reads = jnp.broadcast_to(
+        jnp.asarray(reads, jnp.float32), state.reads.shape
+    )
+    # 1. Exponential relaxation toward the per-cell equilibrium.
+    settle = 1.0 - jnp.exp(-dt / cfg.tau_relax_s)
+    g = state.g + (state.g_eq - state.g) * settle
+    # 2. Log-time drift, exact composition over the age increment.  The
+    # equilibrium decays too — drift is filament dissolution, not a
+    # displacement relaxation could undo — otherwise relaxation would
+    # restore drifted cells for free.
+    factor = jnp.power(
+        (state.age_s + dt + cfg.t0_s) / (state.age_s + cfg.t0_s), -state.nu
+    )
+    g = g * factor
+    g_eq = state.g_eq * factor
+    # 3. Read disturb: SET-ward, proportional to new reads this step.
+    g = g + cfg.read_disturb_lsb * reads
+    g = jnp.clip(g, 0.0, dev.g_max_lsb)
+    # 4. Stuck cells are frozen filaments: they neither drift nor switch.
+    g = jnp.where(state.stuck, state.g, g)
+    g_eq = jnp.where(state.stuck, state.g_eq, g_eq)
+    return state._replace(
+        g=g, g_eq=g_eq, age_s=state.age_s + dt, reads=state.reads + reads
+    )
+
+
+def reset_programmed(
+    key: jax.Array,
+    state: CellState,
+    g_new: jax.Array,
+    refreshed: jax.Array,
+    pulses_per_cell: jax.Array,
+    dev: DeviceConfig,
+    cfg: DriftConfig,
+) -> CellState:
+    """Fold a re-programming event into the aging state.
+
+    Args:
+      key: PRNG key (fresh relaxation equilibria for refreshed columns).
+      state: state *before* the re-program.
+      g_new: (C, N) conductances produced by the WV engine.
+      refreshed: (C,) bool — which columns were actually re-programmed.
+      pulses_per_cell: (C, N) write pulses this event charged per cell.
+      dev, cfg: device / drift configs.
+
+    Refreshed columns restart their relaxation clock (age, reads, fresh
+    g_eq); stuck cells ignore the new conductance (writes cannot move
+    them); every applied pulse adds endurance wear, which may newly
+    exceed a cell's limit and stick it.
+    """
+    k_eq, k_nu = jax.random.split(key)
+    col = refreshed[:, None]
+    g = jnp.where(col & ~state.stuck, g_new, state.g)
+    cycles = state.cycles + jnp.where(
+        state.stuck, 0.0, pulses_per_cell.astype(jnp.float32)
+    )
+    stuck = state.stuck | (cycles > state.limit)
+    g_eq = jnp.where(col, _sample_equilibrium(k_eq, g, dev, cfg), state.g_eq)
+    nu = jnp.where(col, _sample_nu(k_nu, g.shape, cfg), state.nu)
+    zeros = jnp.zeros_like(state.age_s)
+    return state._replace(
+        g=g,
+        g_eq=g_eq,
+        nu=nu,
+        age_s=jnp.where(col, zeros, state.age_s),
+        reads=jnp.where(col, zeros, state.reads),
+        cycles=cycles,
+        stuck=stuck,
+    )

@@ -1,0 +1,277 @@
+"""Scrub policies: when and what to re-program on an aging array.
+
+Three policies, each cost-accounted through `core.cost` so that
+"latency/energy per retained accuracy" is a first-class metric:
+
+* ``none``             — never touch the array (the drift baseline).
+* ``periodic``         — blind full re-program of *every* column each
+                         `period_epochs`.  Maximum retention, maximum
+                         cost: pays the whole WV pipeline per column
+                         per period, no verify needed.
+* ``verify_triggered`` — the HD-PV/HARP showcase: one Hadamard verify
+                         sweep per column (N reads — the same sweep the
+                         WV loop uses, so one sweep costs exactly one
+                         `read_phase_cost`) flags columns whose decoded
+                         deviation exceeds the threshold; only flagged
+                         columns re-enter `program_columns`.  A one-hot
+                         (CW-SC/MRA-style) detector would spend the same
+                         N reads for ONE cell's worth of information;
+                         the Hadamard sweep screens all N cells at once,
+                         which is what makes cheap scrubbing possible.
+
+Re-programming subsets: flagged column counts vary per epoch, so naive
+re-tracing would recompile `program_columns` for every new count.  The
+subset is padded to the next power of two (re-using column 0 as filler)
+and compiled functions are cached per (config, shape) — at most
+log2(C)+1 compilations per method over a whole simulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import CircuitCost, read_phase_cost
+from repro.core.types import WVConfig, WVMethod
+from repro.core.wv import program_columns, verify_sweep
+
+from .drift import CellState, DriftConfig, effective_d2d, reset_programmed
+
+__all__ = [
+    "RefreshPolicy",
+    "RefreshConfig",
+    "RefreshOutcome",
+    "default_flag_params",
+    "flag_columns",
+    "apply_refresh",
+]
+
+
+class RefreshPolicy(str, enum.Enum):
+    NONE = "none"
+    PERIODIC = "periodic"
+    VERIFY_TRIGGERED = "verify_triggered"
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshConfig:
+    """Scrub policy configuration.
+
+    The verify-triggered detector repeats the method's own verify sweep
+    `verify_sweeps` times and flags a cell only when `votes` sweeps
+    agree on the sign of its deviation — a repetition vote that crushes
+    the single-sweep false-alarm rate (a lone HARP ternary sweep at the
+    programming threshold fires on nearly every healthy column).  The
+    `None` defaults resolve per method via `default_flag_params`,
+    calibrated so a healthy column flags <~10% of the time while a
+    >=1-LSB drifted cell is caught with >90% probability.
+    """
+
+    policy: RefreshPolicy = RefreshPolicy.VERIFY_TRIGGERED
+    period_epochs: int = 1        # PERIODIC cadence / VT verify cadence
+    max_bad_cells: int = 1        # VT: flag a column when more than this
+                                  # many cells read out-of-threshold
+    verify_sweeps: int | None = None    # None -> per-method default
+    votes: int | None = None            # sweeps that must agree per cell
+    threshold_lsb: float | None = None  # compare threshold override
+    tau_w_scale: float = 2.0      # HARP flag threshold: tau_w_scale * tau_w
+
+    def replace(self, **kw) -> "RefreshConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def default_flag_params(method: WVMethod) -> tuple[int, int, float]:
+    """(verify_sweeps, votes, threshold_lsb) calibrated per method.
+
+    HD-PV decodes a near-unbiased magnitude estimate (read noise down
+    ~sqrt(N)) so 2 agreeing sweeps suffice; HARP's ternary aggregate and
+    CW-SC's raw one-hot compares are noisier and take a 3-of-4 / 4-of-4
+    vote.  Even at 4 sweeps HARP's compare-only detector costs less
+    energy than a single HD-PV full-SAR sweep.
+    """
+    return {
+        WVMethod.CW_SC: (4, 4, 0.75),
+        WVMethod.MRA: (2, 2, 0.75),
+        WVMethod.HD_PV: (2, 2, 0.75),
+        WVMethod.HARP: (4, 3, 1.0),
+    }[method]
+
+
+@dataclasses.dataclass
+class RefreshOutcome:
+    """What one refresh step did and what it cost (per column batch)."""
+
+    flagged: np.ndarray | None = None   # (C,) bool, VT only
+    n_reprogrammed: int = 0
+    verify_latency_ns: float = 0.0
+    verify_energy_pj: float = 0.0
+    program_latency_ns: float = 0.0     # critical path: max over columns
+    program_energy_pj: float = 0.0
+    write_pulses: float = 0.0
+
+    @property
+    def maintenance_energy_pj(self) -> float:
+        return self.verify_energy_pj + self.program_energy_pj
+
+    @property
+    def maintenance_latency_ns(self) -> float:
+        return self.verify_latency_ns + self.program_latency_ns
+
+
+def flag_columns(
+    key: jax.Array,
+    g: jax.Array,
+    targets: jax.Array,
+    cfg: WVConfig,
+    refresh_cfg: RefreshConfig | None = None,
+) -> tuple[jax.Array, int]:
+    """Voted verify sweeps -> ((C,) bool drifted-column mask, sweeps used).
+
+    Uses the configured WV method's own verify path (`verify_sweep`), so
+    HD-PV/HARP detection inherits exactly the paper's read model: N
+    Hadamard reads, common-mode cancellation, ADC quantization and all.
+    A cell is bad when `votes` of `verify_sweeps` independent sweeps
+    agree on its deviation sign; a column is flagged when more than
+    `max_bad_cells` cells are bad.
+    """
+    rc = refresh_cfg or RefreshConfig()
+    sweeps, votes, thr = default_flag_params(cfg.method)
+    sweeps = rc.verify_sweeps if rc.verify_sweeps is not None else sweeps
+    votes = rc.votes if rc.votes is not None else votes
+    thr = rc.threshold_lsb if rc.threshold_lsb is not None else thr
+    cfg = cfg.replace(
+        decision_threshold_lsb=thr, tau_w=rc.tau_w_scale * cfg.tau_w
+    )
+    targets = targets.astype(jnp.float32)
+    pos = jnp.zeros_like(g)
+    neg = jnp.zeros_like(g)
+    for r in range(sweeps):
+        d, _, _ = verify_sweep(jax.random.fold_in(key, r), g, targets, cfg)
+        pos = pos + (d > 0.0)
+        neg = neg + (d < 0.0)
+    bad = jnp.sum(jnp.maximum(pos, neg) >= votes, axis=-1)
+    return bad > rc.max_bad_cells, sweeps
+
+
+# (method, n_cells, shape, ...) -> compiled program fn; configs hash by
+# value (frozen dataclasses), so the cache is shared across epochs.
+_PROGRAM_CACHE: dict = {}
+
+
+def _program_fn(cfg: WVConfig, cost: CircuitCost):
+    key = (cfg, cost)
+    fn = _PROGRAM_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(partial(program_columns, cfg=cfg, cost=cost))
+        _PROGRAM_CACHE[key] = fn
+    return fn
+
+
+def _pad_pow2(idx: np.ndarray, c: int) -> np.ndarray:
+    """Pad a flagged-index set to the next power of two (capped at C)."""
+    n = len(idx)
+    size = 1
+    while size < n:
+        size *= 2
+    size = min(size, c)
+    if size > n:
+        # Filler columns: recycle flagged indices (re-programming the
+        # same column twice in one batch is harmless — only the first
+        # occurrence is scattered back).
+        filler = idx[np.arange(size - n) % n]
+        idx = np.concatenate([idx, filler])
+    return idx
+
+
+def _reprogram_subset(
+    key: jax.Array,
+    state: CellState,
+    targets: jax.Array,
+    mask: np.ndarray,
+    cfg: WVConfig,
+    cost: CircuitCost,
+    drift_cfg: DriftConfig,
+) -> tuple[CellState, float, float, float]:
+    """Re-program the masked columns; returns (state, lat, energy, pulses).
+
+    Wear-degraded step efficiency feeds `program_columns` through its
+    d2d argument, so an old array genuinely takes more WV iterations to
+    converge (and may fail to).  Latency is the max over re-programmed
+    columns (they run array-parallel); energy is the sum.
+    """
+    c, n = targets.shape
+    idx = np.nonzero(mask)[0]
+    if len(idx) == 0:
+        return state, 0.0, 0.0, 0.0
+    idx_p = _pad_pow2(idx, c)
+    sub_targets = targets[idx_p]
+    sub_d2d = effective_d2d(state, drift_cfg)[idx_p]
+    k_prog, k_state = jax.random.split(key)
+    g_sub, stats = _program_fn(cfg, cost)(k_prog, sub_targets, d2d=sub_d2d)
+
+    # Scatter back; idx_p = [idx, filler], so rows 0..len(idx)-1 are the
+    # real flagged columns and filler rows are discarded duplicates.
+    rows = np.arange(len(idx))
+    g_new = state.g.at[idx].set(g_sub[rows])
+    refreshed = jnp.zeros((c,), bool).at[idx].set(True)
+    # Per-cell pulse attribution: the engine reports per-column totals;
+    # spread uniformly over the column's cells (documented approximation,
+    # DESIGN.md Sec. 9).
+    pulses_col = stats.write_pulses[rows] / n                    # (|idx|,)
+    pulses_cell = jnp.zeros_like(state.cycles).at[idx].set(
+        jnp.broadcast_to(pulses_col[:, None], (len(idx), n))
+    )
+    new_state = reset_programmed(
+        k_state, state, g_new, refreshed, pulses_cell, cfg.device, drift_cfg
+    )
+    lat = float(jnp.max(stats.latency_ns[rows]))
+    en = float(jnp.sum(stats.energy_pj[rows]))
+    pulses = float(jnp.sum(stats.write_pulses[rows]))
+    return new_state, lat, en, pulses
+
+
+def apply_refresh(
+    key: jax.Array,
+    state: CellState,
+    targets: jax.Array,
+    cfg: WVConfig,
+    cost: CircuitCost,
+    drift_cfg: DriftConfig,
+    refresh_cfg: RefreshConfig,
+    epoch: int,
+) -> tuple[CellState, RefreshOutcome]:
+    """Run one epoch's refresh decision for a batch of columns."""
+    c = targets.shape[0]
+    outcome = RefreshOutcome()
+    policy = refresh_cfg.policy
+    due = (epoch + 1) % max(refresh_cfg.period_epochs, 1) == 0
+    if policy == RefreshPolicy.NONE or not due:
+        return state, outcome
+
+    k_v, k_p = jax.random.split(key)
+    if policy == RefreshPolicy.PERIODIC:
+        mask = np.ones((c,), bool)
+    elif policy == RefreshPolicy.VERIFY_TRIGGERED:
+        flagged, sweeps = flag_columns(k_v, state.g, targets, cfg, refresh_cfg)
+        mask = np.asarray(flagged)
+        # Every column pays `sweeps` verify sweeps (read phase, no writes).
+        lat_v, en_v = read_phase_cost(cfg, cost)
+        outcome.verify_latency_ns = float(lat_v) * sweeps  # array-parallel
+        outcome.verify_energy_pj = float(en_v) * sweeps * c
+        outcome.flagged = mask
+    else:
+        raise ValueError(policy)
+
+    state, lat, en, pulses = _reprogram_subset(
+        k_p, state, targets, mask, cfg, cost, drift_cfg
+    )
+    outcome.n_reprogrammed = int(mask.sum())
+    outcome.program_latency_ns = lat
+    outcome.program_energy_pj = en
+    outcome.write_pulses = pulses
+    return state, outcome

@@ -1,0 +1,214 @@
+"""Lifetime serving simulation: age, verify, scrub, re-materialize.
+
+`LifetimeSimulator` owns the analog side of a deployment — the
+`DeployedModel` array state plus one aging `CellState` per RRAM leaf —
+and steps wall-clock epochs interleaved with serving traffic:
+
+    for each epoch:
+        1. age every array by `dt_s` under the epoch's read traffic
+           (every ACiM inference reads every column once per token);
+        2. run the refresh policy (verify sweeps / re-programming);
+        3. re-materialize dense params and push them to the serving
+           engine via the `on_refresh` hook (`ServeEngine.swap_params`);
+        4. evaluate (optional `eval_fn`) and append an `EpochRecord`.
+
+The report carries both sides of the trade: accuracy retained (eval
+metric + weight-domain RMS drift) and what retention cost (verify
+energy, re-program energy, write pulses, wall latency) — so policies
+are comparable as energy-per-retained-accuracy (DESIGN.md Sec. 9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.programmer import DeployedModel
+
+from .drift import DriftConfig, advance, init_cell_state
+from .refresh import RefreshConfig, apply_refresh
+
+__all__ = ["EpochRecord", "LifetimeReport", "LifetimeSimulator"]
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    """One epoch of the lifetime time series (aggregated over leaves)."""
+
+    epoch: int
+    t_s: float                       # wall-clock age at end of epoch
+    reads_per_column: float          # traffic applied this epoch
+    rms_drift_lsb: float             # cell-domain RMS |g - target|
+    stuck_frac: float                # fraction of cells stuck
+    columns_flagged: int             # VT verify flags this epoch
+    columns_reprogrammed: int
+    verify_energy_pj: float
+    program_energy_pj: float
+    maintenance_latency_ns: float
+    write_pulses: float
+    eval_metric: float | None = None
+
+
+@dataclasses.dataclass
+class LifetimeReport:
+    """Accuracy-vs-time trajectory with per-epoch maintenance costs."""
+
+    policy: str
+    method: str
+    records: list[EpochRecord] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_maintenance_energy_pj(self) -> float:
+        return sum(r.verify_energy_pj + r.program_energy_pj for r in self.records)
+
+    @property
+    def total_verify_energy_pj(self) -> float:
+        return sum(r.verify_energy_pj for r in self.records)
+
+    @property
+    def final_rms_drift_lsb(self) -> float:
+        return self.records[-1].rms_drift_lsb if self.records else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "policy": self.policy,
+            "method": self.method,
+            "total_maintenance_energy_pj": self.total_maintenance_energy_pj,
+            "records": [dataclasses.asdict(r) for r in self.records],
+        }
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+
+class LifetimeSimulator:
+    """Owns deployed array state and drives it through aging epochs.
+
+    Args:
+      key: PRNG key (per-leaf aging randomness derives from it).
+      deployed: `deploy_arrays` output; the simulator takes ownership of
+        its conductances (state-ownership contract, DESIGN.md Sec. 9).
+      drift_cfg / refresh_cfg: dynamics and scrub policy.
+      on_refresh: optional hook called with freshly materialized params
+        after every epoch whose refresh re-programmed at least one
+        column (e.g. ``engine.swap_params``).
+    """
+
+    def __init__(
+        self,
+        key: jax.Array,
+        deployed: DeployedModel,
+        drift_cfg: DriftConfig | None = None,
+        refresh_cfg: RefreshConfig | None = None,
+        on_refresh: Callable[[Any], None] | None = None,
+    ):
+        self.key = key
+        self.deployed = deployed
+        self.drift_cfg = drift_cfg or DriftConfig()
+        self.refresh_cfg = refresh_cfg or RefreshConfig()
+        self.on_refresh = on_refresh
+        self.t_s = 0.0
+        self.epoch = 0
+        k = key
+        self.states = {}
+        for name, arr in deployed.arrays.items():
+            k, sub = jax.random.split(k)
+            self.states[name] = init_cell_state(
+                sub, arr.g, arr.d2d, deployed.wv_cfg.device, self.drift_cfg
+            )
+
+    def _sync_deployed(self) -> None:
+        for name, st in self.states.items():
+            self.deployed.update_array(name, st.g)
+
+    def _rms_drift_lsb(self) -> float:
+        num = 0.0
+        den = 0
+        for name, st in self.states.items():
+            tgt = self.deployed.arrays[name].targets
+            err = st.g - tgt.astype(jnp.float32)
+            num += float(jnp.sum(err * err))
+            den += err.size
+        return (num / max(den, 1)) ** 0.5
+
+    def _stuck_frac(self) -> float:
+        tot = sum(st.stuck.size for st in self.states.values())
+        bad = sum(float(jnp.sum(st.stuck)) for st in self.states.values())
+        return bad / max(tot, 1)
+
+    def step_epoch(
+        self,
+        dt_s: float,
+        reads_per_column: float,
+        eval_fn: Callable[[Any], float] | None = None,
+    ) -> EpochRecord:
+        """Age by `dt_s`, refresh, re-materialize, evaluate."""
+        wv_cfg, cost = self.deployed.wv_cfg, self.deployed.cost
+        flagged = reprogrammed = 0
+        en_v = en_p = lat = pulses = 0.0
+        for li, (name, st) in enumerate(sorted(self.states.items())):
+            k_adv, k_ref = jax.random.split(
+                jax.random.fold_in(jax.random.fold_in(self.key, self.epoch), li)
+            )
+            st = advance(
+                k_adv, st, dt_s, reads_per_column, wv_cfg.device, self.drift_cfg
+            )
+            st, out = apply_refresh(
+                k_ref, st, self.deployed.arrays[name].targets, wv_cfg, cost,
+                self.drift_cfg, self.refresh_cfg, self.epoch,
+            )
+            self.states[name] = st
+            if out.flagged is not None:
+                flagged += int(out.flagged.sum())
+            reprogrammed += out.n_reprogrammed
+            en_v += out.verify_energy_pj
+            en_p += out.program_energy_pj
+            lat = max(lat, out.maintenance_latency_ns)  # leaves in parallel
+            pulses += out.write_pulses
+
+        self.t_s += dt_s
+        self.epoch += 1
+        self._sync_deployed()
+        params = None
+        if reprogrammed and self.on_refresh is not None:
+            params = self.deployed.materialize()
+            self.on_refresh(params)
+        metric = None
+        if eval_fn is not None:
+            if params is None:
+                params = self.deployed.materialize()
+            metric = float(eval_fn(params))
+        return EpochRecord(
+            epoch=self.epoch - 1,
+            t_s=self.t_s,
+            reads_per_column=float(reads_per_column),
+            rms_drift_lsb=self._rms_drift_lsb(),
+            stuck_frac=self._stuck_frac(),
+            columns_flagged=flagged,
+            columns_reprogrammed=reprogrammed,
+            verify_energy_pj=en_v,
+            program_energy_pj=en_p,
+            maintenance_latency_ns=lat,
+            write_pulses=pulses,
+            eval_metric=metric,
+        )
+
+    def run(
+        self,
+        epochs: int,
+        dt_s: float,
+        reads_per_column: float = 0.0,
+        eval_fn: Callable[[Any], float] | None = None,
+    ) -> LifetimeReport:
+        """Step `epochs` fixed-size epochs; returns the full time series."""
+        report = LifetimeReport(
+            policy=self.refresh_cfg.policy.value,
+            method=self.deployed.wv_cfg.method.value,
+        )
+        for _ in range(epochs):
+            report.records.append(self.step_epoch(dt_s, reads_per_column, eval_fn))
+        return report

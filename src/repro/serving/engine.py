@@ -53,6 +53,17 @@ class ServeEngine:
             make_decode_step(self.cfg, self.mesh, sample=self.temperature > 0)
         )
 
+    def swap_params(self, params: Any) -> None:
+        """Hot-swap served weights (e.g. after an RRAM refresh).
+
+        Step functions are jitted with params as a traced argument, so a
+        swap is free: no recompilation, next decode step serves the new
+        weights.  This is the re-materialize hook the lifetime
+        subsystem's scrub loop drives (`LifetimeSimulator(on_refresh=
+        engine.swap_params)`).
+        """
+        self.params = params
+
     def generate(
         self, tokens: jax.Array, max_new: int, key=None, eos_id: int | None = None
     ) -> jax.Array:

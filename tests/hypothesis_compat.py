@@ -1,0 +1,32 @@
+"""Optional-hypothesis shim for property-based tests.
+
+`hypothesis` is a dev-only dependency (requirements-dev.txt).  Modules that
+are *entirely* property-based guard themselves with
+``pytest.importorskip("hypothesis")``; modules where only a few tests use
+hypothesis import ``given / settings / st`` from here instead, so the rest
+of the module still collects and runs when hypothesis is absent — the
+property tests alone report as skipped.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # exercised when hypothesis is not installed
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Stands in for `strategies`; tests using it are skipped anyway."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f

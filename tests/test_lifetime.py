@@ -1,0 +1,275 @@
+"""Lifetime subsystem: drift dynamics, refresh policies, deploy state."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.device as dev_mod
+from repro.core import (
+    CircuitCost,
+    NoiseConfig,
+    WVConfig,
+    WVMethod,
+    default_config_for_array,
+)
+from repro.core.programmer import deploy_arrays, deploy_params
+from repro.lifetime import (
+    CellState,
+    DriftConfig,
+    LifetimeSimulator,
+    RefreshConfig,
+    RefreshPolicy,
+    advance,
+    apply_refresh,
+    flag_columns,
+    init_cell_state,
+    reset_programmed,
+    wear_efficiency,
+)
+
+C, N = 24, 16
+
+
+def _state(seed=0, drift_cfg=None, g=None):
+    dev = WVConfig(n_cells=N).device
+    dcfg = drift_cfg or DriftConfig()
+    key = jax.random.PRNGKey(seed)
+    k_t, k_d, k_s = jax.random.split(key, 3)
+    if g is None:
+        g = jax.random.randint(k_t, (C, N), 0, dev.levels).astype(jnp.float32)
+    d2d = dev_mod.sample_d2d(k_d, g.shape, dev)
+    return init_cell_state(k_s, g, d2d, dev, dcfg), g, dev, dcfg
+
+
+# ------------------------------------------------------------- drift
+def test_relaxation_settles_toward_equilibrium():
+    # Isolate relaxation: no log drift, no disturb (nu is sampled into the
+    # state at init, so the config must be drift-free *at init*).
+    dcfg = DriftConfig(nu_drift=0.0, sigma_nu_frac=0.0, read_disturb_lsb=0.0)
+    st, g0, dev, dcfg = _state(drift_cfg=dcfg)
+    st1 = advance(jax.random.PRNGKey(1), st, 40.0, 0.0, dev, dcfg)
+    st2 = advance(jax.random.PRNGKey(2), st1, 1e6, 0.0, dev, dcfg)
+    d1 = float(jnp.mean(jnp.abs(st1.g - st.g_eq)))
+    d0 = float(jnp.mean(jnp.abs(st.g - st.g_eq)))
+    assert d1 < d0  # monotone approach...
+    np.testing.assert_allclose(st2.g, st.g_eq, atol=1e-4)  # ...to equilibrium
+    # Direction: cells relax toward mid-scale on average (rail pull).
+    hi = np.asarray(g0) > 0.75 * dev.g_max_lsb
+    assert float(jnp.mean((st2.g - g0)[hi])) < 0.0
+
+
+def test_advance_deterministic_and_scannable():
+    st, _, dev, dcfg = _state()
+    key = jax.random.PRNGKey(3)
+    a = advance(key, st, 600.0, 100.0, dev, dcfg)
+    b = advance(key, st, 600.0, 100.0, dev, dcfg)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def body(carry, k):
+        return advance(k, carry, 600.0, 100.0, dev, dcfg), None
+
+    keys = jax.random.split(key, 4)
+    scanned, _ = jax.lax.scan(body, st, keys)
+    seq = st
+    for k in keys:
+        seq = advance(k, seq, 600.0, 100.0, dev, dcfg)
+    np.testing.assert_allclose(np.asarray(scanned.g), np.asarray(seq.g), atol=1e-5)
+    assert float(scanned.age_s[0, 0]) == pytest.approx(2400.0)
+    assert float(scanned.reads[0, 0]) == pytest.approx(400.0)
+
+
+def test_log_drift_decays_and_composes():
+    st, g0, dev, _ = _state()
+    dcfg = DriftConfig(
+        tau_relax_s=1e-6, relax_frac=0.0, sigma_relax_lsb=0.0,
+        nu_drift=0.05, sigma_nu_frac=0.0, read_disturb_lsb=0.0,
+    )
+    st, g0, dev, dcfg = _state(drift_cfg=dcfg)
+    one = advance(jax.random.PRNGKey(0), st, 7200.0, 0.0, dev, dcfg)
+    two = advance(
+        jax.random.PRNGKey(1),
+        advance(jax.random.PRNGKey(0), st, 3600.0, 0.0, dev, dcfg),
+        3600.0, 0.0, dev, dcfg,
+    )
+    # Exact composition: two half steps == one full step.
+    np.testing.assert_allclose(np.asarray(one.g), np.asarray(two.g), atol=1e-5)
+    nz = np.asarray(g0) > 0
+    assert np.all(np.asarray(one.g)[nz] < np.asarray(g0)[nz])
+
+
+def test_read_disturb_accumulates_setward():
+    dcfg = DriftConfig(
+        tau_relax_s=1e9, nu_drift=0.0, sigma_nu_frac=0.0,
+        read_disturb_lsb=1e-4,
+    )
+    st, g0, dev, dcfg = _state(drift_cfg=dcfg)
+    aged = advance(jax.random.PRNGKey(0), st, 1.0, 1000.0, dev, dcfg)
+    inner = ~((np.asarray(g0) <= 0) | (np.asarray(g0) >= dev.g_max_lsb))
+    delta = np.asarray(aged.g - g0)[inner]
+    np.testing.assert_allclose(delta, 0.1, atol=1e-5)
+
+
+def test_wear_monotonically_degrades_step_efficiency():
+    dcfg = DriftConfig()
+    cycles = jnp.asarray([0.0, 1e4, 1e5, 1e6, 1e7])
+    eff = np.asarray(wear_efficiency(cycles, dcfg))
+    assert eff[0] == pytest.approx(1.0)
+    assert np.all(np.diff(eff) < 0)
+    assert np.all(eff > 0)
+
+
+def test_stuck_cells_freeze():
+    dcfg = DriftConfig(endurance_cycles=10.0, sigma_endurance_dec=0.0)
+    st, g0, dev, dcfg = _state(drift_cfg=dcfg)
+    pulses = jnp.full((C, N), 100.0)  # blow past every cell's limit
+    refreshed = jnp.ones((C,), bool)
+    st2 = reset_programmed(
+        jax.random.PRNGKey(1), st, st.g, refreshed, pulses, dev, dcfg
+    )
+    assert bool(jnp.all(st2.stuck))
+    aged = advance(jax.random.PRNGKey(2), st2, 1e6, 1e6, dev, dcfg)
+    np.testing.assert_array_equal(np.asarray(aged.g), np.asarray(st2.g))
+
+
+# ------------------------------------------------------------- refresh
+def test_verify_triggered_flags_exactly_drifted_columns():
+    cfg = WVConfig(
+        method=WVMethod.HD_PV, n_cells=N,
+        noise=NoiseConfig(sigma_read_lsb=0.0),
+    )
+    targets = jax.random.randint(
+        jax.random.PRNGKey(0), (C, N), 0, cfg.device.levels
+    ).astype(jnp.float32)
+    g = targets  # perfectly programmed
+    drifted = [3, 11, 17]
+    for c in drifted:
+        delta = jnp.where(targets[c, :4] > 3.0, -2.0, 2.0)  # stay in range
+        g = g.at[c, :4].add(delta)
+    flags, sweeps = flag_columns(
+        jax.random.PRNGKey(1), g, targets, cfg, RefreshConfig()
+    )
+    assert sweeps >= 1
+    np.testing.assert_array_equal(
+        np.nonzero(np.asarray(flags))[0], np.asarray(drifted)
+    )
+
+
+def test_refresh_policies_reprogram_and_account_cost():
+    # tau_w scales with N (default_config_for_array); plain tau_w=4 at
+    # N=16 under-corrects and re-programming would not beat the drift.
+    cfg = default_config_for_array(N).replace(method=WVMethod.HARP)
+    dcfg = DriftConfig()
+    cost = CircuitCost()
+    st, targets, dev, _ = _state(seed=2)
+    # Age hard so columns genuinely drift.
+    st = advance(jax.random.PRNGKey(5), st, 3600.0, 1e5, dev,
+                 dcfg.replace(nu_drift=0.05))
+    rms_pre = float(jnp.sqrt(jnp.mean((st.g - targets) ** 2)))
+
+    st_none, out_none = apply_refresh(
+        jax.random.PRNGKey(6), st, targets, cfg, cost, dcfg,
+        RefreshConfig(policy=RefreshPolicy.NONE), epoch=0,
+    )
+    assert out_none.n_reprogrammed == 0
+    assert out_none.maintenance_energy_pj == 0.0
+    np.testing.assert_array_equal(np.asarray(st_none.g), np.asarray(st.g))
+
+    st_p, out_p = apply_refresh(
+        jax.random.PRNGKey(6), st, targets, cfg, cost, dcfg,
+        RefreshConfig(policy=RefreshPolicy.PERIODIC), epoch=0,
+    )
+    assert out_p.n_reprogrammed == C
+    assert out_p.program_energy_pj > 0
+    assert out_p.verify_energy_pj == 0.0
+    rms_post = float(jnp.sqrt(jnp.mean((st_p.g - targets) ** 2)))
+    assert rms_post < rms_pre
+    # Refresh restarts the relaxation/drift clock and charges wear.
+    assert float(jnp.max(st_p.age_s)) == 0.0
+    assert float(jnp.sum(st_p.cycles)) > float(jnp.sum(st.cycles))
+
+    st_v, out_v = apply_refresh(
+        jax.random.PRNGKey(6), st, targets, cfg, cost, dcfg,
+        RefreshConfig(policy=RefreshPolicy.VERIFY_TRIGGERED), epoch=0,
+    )
+    assert out_v.flagged is not None
+    assert out_v.n_reprogrammed == int(out_v.flagged.sum())
+    assert out_v.verify_energy_pj > 0
+    # Only flagged columns were touched.
+    untouched = ~out_v.flagged
+    np.testing.assert_array_equal(
+        np.asarray(st_v.g)[untouched], np.asarray(st.g)[untouched]
+    )
+
+
+def test_periodic_respects_period():
+    cfg = WVConfig(method=WVMethod.HARP, n_cells=N)
+    st, targets, dev, dcfg = _state(seed=3)
+    rcfg = RefreshConfig(policy=RefreshPolicy.PERIODIC, period_epochs=3)
+    _, out0 = apply_refresh(
+        jax.random.PRNGKey(0), st, targets, cfg, CircuitCost(), dcfg, rcfg, 0
+    )
+    _, out2 = apply_refresh(
+        jax.random.PRNGKey(0), st, targets, cfg, CircuitCost(), dcfg, rcfg, 2
+    )
+    assert out0.n_reprogrammed == 0       # epoch 0: not due yet
+    assert out2.n_reprogrammed == C       # epoch 2: (2+1) % 3 == 0
+
+
+# ------------------------------------------------------- deploy state
+def test_deploy_arrays_rematerialize_matches_deploy_params():
+    key = jax.random.PRNGKey(0)
+    params = {
+        "blk": {"w": jax.random.normal(key, (40, 24)) * 0.3},
+        "norm": jnp.ones((24,)),
+    }
+    cfg = WVConfig(method=WVMethod.HARP)
+    dense, rep_a = deploy_params(jax.random.PRNGKey(7), params, cfg)
+    deployed, rep_b = deploy_arrays(jax.random.PRNGKey(7), params, cfg)
+    mat = deployed.materialize()
+    # Bit-identical round-trip: same keys, same WV trajectory.
+    np.testing.assert_array_equal(
+        np.asarray(dense["blk"]["w"]), np.asarray(mat["blk"]["w"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(params["norm"]), np.asarray(mat["norm"])
+    )
+    assert rep_a.rms_cell_error_lsb == pytest.approx(rep_b.rms_cell_error_lsb)
+    assert rep_a.num_columns == rep_b.num_columns == deployed.num_columns
+
+    # update_array propagates into the next materialization.
+    name = next(iter(deployed.arrays))
+    arr = deployed.arrays[name]
+    deployed.update_array(name, arr.targets.astype(jnp.float32))
+    perfect = deployed.materialize()
+    assert not np.array_equal(
+        np.asarray(perfect["blk"]["w"]), np.asarray(mat["blk"]["w"])
+    )
+
+
+def test_lifetime_simulator_end_to_end():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (32, 12)) * 0.3}
+    cfg = WVConfig(method=WVMethod.HARP)
+    deployed, _ = deploy_arrays(jax.random.PRNGKey(1), params, cfg)
+    swaps = []
+    sim = LifetimeSimulator(
+        jax.random.PRNGKey(2),
+        deployed,
+        drift_cfg=DriftConfig(nu_drift=0.05),
+        refresh_cfg=RefreshConfig(policy=RefreshPolicy.VERIFY_TRIGGERED),
+        on_refresh=lambda p: swaps.append(p),
+    )
+    report = sim.run(
+        epochs=3, dt_s=3600.0, reads_per_column=1e4,
+        eval_fn=lambda p: float(jnp.mean(jnp.abs(p["w"] - params["w"]))),
+    )
+    assert len(report.records) == 3
+    assert report.records[-1].t_s == pytest.approx(3 * 3600.0)
+    assert all(r.eval_metric is not None for r in report.records)
+    assert report.total_maintenance_energy_pj >= 0.0
+    d = report.to_dict()
+    assert d["policy"] == "verify_triggered" and len(d["records"]) == 3
+    if any(r.columns_reprogrammed for r in report.records):
+        assert swaps  # refresh hot-swapped params into the "engine"

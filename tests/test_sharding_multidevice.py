@@ -7,9 +7,12 @@ Checks (on a 2x4 ("data","model") debug mesh):
   * elastic checkpoint restore onto a different mesh shape.
 """
 
+import os
 import subprocess
 import sys
 import textwrap
+
+import pytest
 
 SCRIPT = textwrap.dedent(
     """
@@ -83,6 +86,10 @@ SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.skipif(
+    (os.cpu_count() or 1) < 4,
+    reason="forced multi-device host simulation hangs XLA backend init on <4 cores",
+)
 def test_multidevice_sharding_subprocess():
     res = subprocess.run(
         [sys.executable, "-c", SCRIPT],
