@@ -15,6 +15,7 @@ def main() -> None:
         retention_refresh,
         table2_prior_work,
         kernels_bench,
+        deploy_throughput,
     )
 
     print("name,us_per_call,derived")
@@ -30,6 +31,7 @@ def main() -> None:
     table2_prior_work.main()
     retention_refresh.main()
     kernels_bench.main()
+    deploy_throughput.main()
     print(f"benchmarks.total,{(time.time() - t0) * 1e6:.0f},all-passed")
 
 

@@ -9,5 +9,6 @@ from .types import (  # noqa: F401
     default_config_for_array,
 )
 from .cost import CircuitCost  # noqa: F401
-from .wv import WVStats, program_columns, verify_sweep  # noqa: F401
+from .wv import WVStats, program_columns, verify_aggregate, verify_sweep  # noqa: F401
 from . import hadamard  # noqa: F401
+from . import pipeline  # noqa: F401

@@ -19,14 +19,58 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import rng
 from .types import DeviceConfig
 
-__all__ = ["sample_d2d", "apply_pulses", "initial_state"]
+__all__ = [
+    "sample_d2d",
+    "apply_pulses",
+    "initial_state",
+    "write_noise_sigma",
+    "sample_write_noise",
+]
 
 
 def sample_d2d(key: jax.Array, shape, dev: DeviceConfig) -> jax.Array:
-    """Static device-to-device step-efficiency multiplier per cell."""
-    return 1.0 + dev.sigma_d2d_frac * jax.random.normal(key, shape, jnp.float32)
+    """Static device-to-device step-efficiency multiplier per cell.
+
+    `key` may be a batch of per-column keys (leading axis == shape[0]).
+    """
+    return 1.0 + dev.sigma_d2d_frac * rng.normal(key, shape)
+
+
+def write_noise_sigma(dev: DeviceConfig, step_lsb: float) -> float:
+    """Per-single-pulse additive mapping-noise sigma for a pulse class.
+
+    In "pulse" mode the per-pulse sigma is normalized so a full-swing
+    coarse write accumulates ~sigma_map total (see `apply_pulses`); in
+    "event" mode the whole write event draws sigma_map once.
+    """
+    if dev.map_noise_mode == "pulse":
+        n_swing = dev.g_max_lsb / dev.coarse_step_lsb
+        return float(
+            dev.sigma_map_lsb / n_swing**0.5 * (step_lsb / dev.coarse_step_lsb)
+        )
+    return float(dev.sigma_map_lsb)
+
+
+def sample_write_noise(
+    key: jax.Array, shape, dev: DeviceConfig, step_lsb: float | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Pre-sample the stochastic fields of one write event: (c2c, nmap).
+
+    Draws from exactly the key splits `apply_pulses` uses, so the fused
+    Pallas cell-update path (which takes pre-sampled fields) is
+    bit-identical to the unfused path.  `nmap` carries the single-pulse
+    sigma; "pulse"-mode sqrt(n_pulses) scaling is applied downstream
+    (the fused kernel's `nmap_sqrt_pulses` flag / `apply_pulses`).
+    """
+    if step_lsb is None:
+        step_lsb = dev.fine_step_lsb
+    k_c2c, k_map = rng.split(key)
+    c2c = 1.0 + dev.sigma_c2c_frac * rng.normal(k_c2c, shape)
+    nmap = write_noise_sigma(dev, step_lsb) * rng.normal(k_map, shape)
+    return c2c, nmap
 
 
 def initial_state(shape) -> jax.Array:
@@ -76,29 +120,18 @@ def apply_pulses(
     """
     if step_lsb is None:
         step_lsb = dev.fine_step_lsb
-    k_c2c, k_map = jax.random.split(key)
-    n = n_pulses.astype(jnp.float32)
-    pulsed = n > 0
-    step = _effective_step(g, direction, dev, step_lsb) * d2d
-    c2c = 1.0 + dev.sigma_c2c_frac * jax.random.normal(k_c2c, g.shape, jnp.float32)
-    delta = direction.astype(jnp.float32) * step * n * c2c
     # eq. (1): additive mapping noise. "event" mode draws sigma_map once per
     # write event; "pulse" mode draws per-pulse noise proportional to the
     # step size (a random walk over the burst), normalized so a full-swing
     # coarse write realizes ~sigma_map total, matching the one-shot
     # characterization of eq. (1).
+    c2c, nmap = sample_write_noise(key, g.shape, dev, step_lsb)
+    n = n_pulses.astype(jnp.float32)
+    pulsed = n > 0
+    step = _effective_step(g, direction, dev, step_lsb) * d2d
+    delta = direction.astype(jnp.float32) * step * n * c2c
     if dev.map_noise_mode == "pulse":
-        # Normalize so a full-swing coarse write (g_max/coarse_step pulses)
-        # accumulates ~sigma_map total: sigma_p = sigma_map / sqrt(n_swing),
-        # scaled linearly with the step size for other pulse classes.
-        n_swing = dev.g_max_lsb / dev.coarse_step_lsb
-        sigma_p = (
-            dev.sigma_map_lsb / jnp.sqrt(n_swing) * (step_lsb / dev.coarse_step_lsb)
-        )
-        sigma = sigma_p * jnp.sqrt(jnp.maximum(n, 1.0))
-    else:
-        sigma = dev.sigma_map_lsb
-    n_map = sigma * noise_scale * jax.random.normal(k_map, g.shape, jnp.float32)
-    g_new = g + delta + jnp.where(pulsed, n_map, 0.0)
+        nmap = nmap * jnp.sqrt(jnp.maximum(n, 1.0))
+    g_new = g + delta + jnp.where(pulsed, nmap * noise_scale, 0.0)
     g_new = jnp.clip(g_new, 0.0, dev.g_max_lsb)
     return jnp.where(pulsed, g_new, g)

@@ -21,6 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import rng
 from .types import NoiseConfig
 
 __all__ = ["sample_sweep_noise"]
@@ -36,13 +37,11 @@ def sample_sweep_noise(
 
     Returns array of shape (*batch_shape, n_meas): i.i.d. uncorrelated
     noise plus a per-column common-mode offset broadcast across the
-    measurement axis.
+    measurement axis.  `key` may be a batch of per-column keys (one per
+    `batch_shape[0]` column — the batched-pipeline RNG policy, DESIGN.md
+    Sec. 10), in which case each column draws from its own sub-stream.
     """
-    k_uc, k_cm = jax.random.split(key)
-    n_uc = noise.sigma_uc_lsb * jax.random.normal(
-        k_uc, (*batch_shape, n_meas), jnp.float32
-    )
-    mu_cm = noise.sigma_cm_lsb * jax.random.normal(
-        k_cm, (*batch_shape, 1), jnp.float32
-    )
+    k_uc, k_cm = rng.split(key)
+    n_uc = noise.sigma_uc_lsb * rng.normal(k_uc, (*batch_shape, n_meas))
+    mu_cm = noise.sigma_cm_lsb * rng.normal(k_cm, (*batch_shape, 1))
     return n_uc + mu_cm

@@ -1,0 +1,272 @@
+"""Bucketed whole-model programming pipeline (DESIGN.md Sec. 10).
+
+Model deployment used to program one leaf at a time: every leaf shape
+re-traced `program_columns`, and every leaf's report blocked on host
+syncs — throwing away exactly the parallelism the paper buys (columns
+are independent; the whole model is one giant column batch).
+
+This module is the shared hot path for model-scale programming:
+
+* `bucket_sizes` decomposes the total column count into a small menu of
+  power-of-two buckets, so an arbitrary model compiles at most
+  log2(max/min)+1 distinct dispatch shapes — and different models reuse
+  the same compiled sizes.
+* `get_program_fn` is the ONE jit cache for batched programming.  Both
+  deployment (`core.programmer`) and scrubbing (`lifetime.refresh`)
+  dispatch through it, so a refresh after a deploy hits warm compiles.
+  Inputs are donated (targets/d2d buffers are bucket temporaries) and
+  the column axis can be sharded over a device mesh.
+* `program_packed_columns` runs many independently-packed column blocks
+  (one per weight leaf) through the bucket dispatches and splits the
+  results back per block.
+
+Per-column RNG (see `core.rng`): every column draws from
+``fold_in(key, uid)``, so a column's programmed value depends only on
+(key, uid) — not on bucket boundaries or padding.  That is what makes
+the bucketed path bit-identical to the per-leaf path.
+
+The module also keeps two counters the benchmarks/tests assert on:
+`compile_count()` (distinct traced dispatch shapes — must stay <= the
+number of buckets) and `host_sync_count()` (`host_fetch` calls — a
+batched deploy performs exactly one).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import device as dev_mod
+from . import rng
+from .cost import CircuitCost
+from .types import WVConfig
+from .wv import WVStats, program_columns
+
+__all__ = [
+    "bucket_sizes",
+    "get_program_fn",
+    "program_packed_columns",
+    "sample_d2d_for",
+    "host_fetch",
+    "compile_count",
+    "host_sync_count",
+    "reset_counters",
+]
+
+DEFAULT_MIN_BUCKET = 256
+DEFAULT_MAX_BUCKET = 1 << 18
+
+_FN_CACHE: dict = {}
+_TRACED: set = set()
+_COMPILES = 0
+_HOST_SYNCS = 0
+
+
+def compile_count() -> int:
+    """Distinct (config, bucket-shape) dispatches traced so far."""
+    return _COMPILES
+
+
+def host_sync_count() -> int:
+    """`host_fetch` device->host synchronizations performed so far."""
+    return _HOST_SYNCS
+
+
+def reset_counters() -> None:
+    """Zero the observability counters (the jit cache itself survives)."""
+    global _COMPILES, _HOST_SYNCS
+    _COMPILES = 0
+    _HOST_SYNCS = 0
+
+
+def host_fetch(tree):
+    """The pipeline's single device->host transfer point (counted)."""
+    global _HOST_SYNCS
+    _HOST_SYNCS += 1
+    return jax.device_get(tree)
+
+
+def donates() -> bool:
+    """Whether `get_program_fn` donates its targets/d2d arguments.
+
+    Donation is skipped on CPU (unsupported there; jax only warns).
+    Callers that keep a dispatched buffer alive (persistent ArrayState)
+    must pass a copy when this is True.
+    """
+    return jax.default_backend() != "cpu"
+
+
+def bucket_sizes(
+    c_total: int,
+    min_bucket: int = DEFAULT_MIN_BUCKET,
+    max_bucket: int = DEFAULT_MAX_BUCKET,
+) -> list[int]:
+    """Greedy power-of-two decomposition of a column count.
+
+    Returns bucket sizes summing to >= c_total, each a power of two in
+    [min_bucket, max_bucket].  Only the LAST bucket is padded (by at
+    most min_bucket - 1 columns), and the menu of possible sizes has
+    log2(max/min)+1 entries, which bounds the jit cache.
+    """
+    assert min_bucket > 0 and min_bucket & (min_bucket - 1) == 0, min_bucket
+    assert max_bucket >= min_bucket and max_bucket & (max_bucket - 1) == 0, (
+        max_bucket
+    )
+    sizes: list[int] = []
+    rem = c_total
+    while rem >= min_bucket:
+        s = min(max_bucket, 1 << (rem.bit_length() - 1))
+        sizes.append(s)
+        rem -= s
+    if rem > 0 or not sizes:
+        sizes.append(min_bucket)
+    return sizes
+
+
+def get_program_fn(
+    cfg: WVConfig,
+    cost: CircuitCost,
+    mesh: Mesh | None = None,
+    mesh_axes: tuple | None = None,
+):
+    """The shared batched-programming dispatch: (key, targets, d2d, col_ids).
+
+    Returns a jitted callable ``fn(key, (C, N) targets, (C, N) d2d,
+    (C,) col_ids) -> (g, WVStats)`` cached per (cfg, cost, mesh).  The
+    targets/d2d buffers are donated (they are bucket temporaries); when
+    `mesh` is given the column axis is sharded over `mesh_axes`
+    (default: all mesh axes) with zero cross-device traffic inside the
+    WV loop.
+    """
+    cache_key = (cfg, cost, mesh, mesh_axes)
+    entry = _FN_CACHE.get(cache_key)
+    if entry is None:
+
+        def raw(key, targets, d2d, col_ids):
+            return program_columns(
+                key, targets, cfg, cost=cost, d2d=d2d, col_ids=col_ids
+            )
+
+        kw: dict = {}
+        if donates():
+            kw["donate_argnums"] = (1, 2)
+        if mesh is not None:
+            ax = mesh_axes if mesh_axes is not None else tuple(mesh.axis_names)
+            col2 = NamedSharding(mesh, P(ax, None))
+            col1 = NamedSharding(mesh, P(ax))
+            rep = NamedSharding(mesh, P())
+            kw["in_shardings"] = (rep, col2, col2, col1)
+            kw["out_shardings"] = (col2, col1)  # prefix: all WVStats leaves
+        jfn = jax.jit(raw, **kw)
+
+        def entry(key, targets, d2d, col_ids):
+            global _COMPILES
+            tk = (cache_key, targets.shape)
+            if tk not in _TRACED:
+                _TRACED.add(tk)
+                _COMPILES += 1
+            return jfn(key, targets, d2d, col_ids)
+
+        _FN_CACHE[cache_key] = entry
+    return entry
+
+
+def sample_d2d_for(key, col_ids, shape, dev_cfg):
+    """Per-column-stream d2d sample, mirroring `program_columns`' own
+    key schedule (`k_d2d` = first of the column key's 3-way split) so a
+    caller-side sample equals what the engine would draw internally."""
+    k_d2d = rng.split(rng.fold_col_keys(key, col_ids), 3)[0]
+    return dev_mod.sample_d2d(k_d2d, shape, dev_cfg)
+
+
+def program_packed_columns(
+    key: jax.Array,
+    blocks: Sequence[jax.Array],
+    cfg: WVConfig,
+    cost: CircuitCost | None = None,
+    *,
+    mesh: Mesh | None = None,
+    mesh_axes: tuple | None = None,
+    min_bucket: int = DEFAULT_MIN_BUCKET,
+    max_bucket: int = DEFAULT_MAX_BUCKET,
+    uid_base: int = 0,
+) -> tuple[list[jax.Array], list[WVStats], list[jax.Array]]:
+    """Program many packed column blocks in a few bucketed dispatches.
+
+    Args:
+      key: master PRNG key (column sub-streams derive from it).
+      blocks: list of (C_i, N) target-level arrays (e.g. one per leaf).
+      cfg / cost: WV configuration and circuit constants.
+      mesh / mesh_axes: optional device mesh to shard the column axis.
+      min_bucket / max_bucket: power-of-two bucket bounds.
+      uid_base: first column uid (block b's column j gets uid
+        ``uid_base + sum(C_<b) + j``) — must match the per-leaf path's
+        numbering for bit-identical results.
+
+    Returns (g_blocks, stats_blocks, d2d_blocks), all split back to the
+    input block boundaries.  Everything stays on device; no host syncs.
+    """
+    if cost is None:
+        cost = CircuitCost()
+    sizes = [int(b.shape[0]) for b in blocks]
+    c_total = sum(sizes)
+    if c_total == 0:
+        return [], [], []
+    n = int(blocks[0].shape[1])
+    targets = jnp.concatenate(blocks, axis=0) if len(blocks) > 1 else blocks[0]
+    targets = targets.astype(jnp.float32)
+    uids = uid_base + jnp.arange(c_total, dtype=jnp.int32)
+    # d2d is sampled OUTSIDE the donated dispatch: it is persistent array
+    # state (ArrayState.d2d) while the padded bucket buffers are
+    # temporaries.  Same sub-streams as the engine would use internally.
+    d2d = sample_d2d_for(key, uids, (c_total, n), cfg.device)
+
+    fn = get_program_fn(cfg, cost, mesh=mesh, mesh_axes=mesh_axes)
+    g_parts, stat_parts = [], []
+    off = 0
+    for size in bucket_sizes(c_total, min_bucket, max_bucket):
+        take = min(size, c_total - off)
+        tb = targets[off : off + take]
+        db = d2d[off : off + take]
+        ub = uids[off : off + take]
+        pad = size - take
+        if pad:
+            # Filler columns: zero targets, fresh uids past the real
+            # range (their streams never alias a real column's), unit
+            # d2d.  Their rows are sliced off below.
+            tb = jnp.pad(tb, ((0, pad), (0, 0)))
+            db = jnp.pad(db, ((0, pad), (0, 0)), constant_values=1.0)
+            ub = jnp.concatenate(
+                [ub, uid_base + c_total + jnp.arange(pad, dtype=jnp.int32)]
+            )
+        elif donates():
+            # A full-range slice short-circuits to the SAME array, so a
+            # single exact-size bucket would donate the caller's block
+            # (persistent ArrayState.targets) / the returned d2d.  Copy
+            # before donating in that case only.
+            if tb is targets:
+                tb = jnp.copy(tb)
+            if db is d2d:
+                db = jnp.copy(db)
+        g_b, st_b = fn(key, tb, db, ub)
+        g_parts.append(g_b[:take])
+        stat_parts.append(jax.tree.map(lambda x: x[:take], st_b))
+        off += take
+
+    g_all = jnp.concatenate(g_parts) if len(g_parts) > 1 else g_parts[0]
+    stats_all = (
+        jax.tree.map(lambda *xs: jnp.concatenate(xs), *stat_parts)
+        if len(stat_parts) > 1
+        else stat_parts[0]
+    )
+    g_blocks, stats_blocks, d2d_blocks = [], [], []
+    off = 0
+    for c_i in sizes:
+        g_blocks.append(g_all[off : off + c_i])
+        stats_blocks.append(jax.tree.map(lambda x: x[off : off + c_i], stats_all))
+        d2d_blocks.append(d2d[off : off + c_i])
+        off += c_i
+    return g_blocks, stats_blocks, d2d_blocks

@@ -9,7 +9,7 @@ plus aggregate WV statistics (latency / energy / iterations), so a
 trained checkpoint can be "burned" onto simulated RRAM with CW-SC, MRA,
 HD-PV, or HARP and then served to measure end-task robustness.
 
-Two deployment paths share one programming core (`_program_leaf`):
+Two deployment paths share one programming core:
 
 * `deploy_params` / `deploy_matrix` — the original "collapse to dense"
   path: program, read back, return an ordinary parameter pytree.  The
@@ -20,6 +20,15 @@ Two deployment paths share one programming core (`_program_leaf`):
   `scale`, pack `layout`) alive, plus `materialize()` to rebuild dense
   params on demand.  This is what `repro.lifetime` ages, verifies, and
   refreshes: conductances are *state*, not a one-shot output.
+
+By default both deploy the whole model through the bucketed programming
+pipeline (`core.pipeline`, DESIGN.md Sec. 10): all leaves' packed
+columns are concatenated into a few power-of-two column buckets, each
+programmed by ONE jitted, donated `program_columns` dispatch (column
+axis shardable over a device mesh), with `DeployReport` accumulated
+device-side and a single host sync per deploy.  `batched=False` keeps
+the per-leaf baseline path; per-column RNG sub-streams make the two
+bit-identical.
 
 Deployment policy (documented in DESIGN.md Sec. 3):
 * >=2D weight leaves go to RRAM (flattened to (K, M) on the last axis);
@@ -50,10 +59,10 @@ from repro.quant import (
 )
 from repro.quant.pack import PackedLayout
 
-from . import device as dev_mod
+from . import pipeline
 from .cost import CircuitCost
 from .types import WVConfig
-from .wv import WVStats, program_columns
+from .wv import WVStats
 
 __all__ = [
     "ArrayState",
@@ -77,6 +86,56 @@ class DeployReport:
     total_energy_pj: float = 0.0
     rms_cell_error_lsb: float = 0.0
     leaves: dict[str, dict[str, float]] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def collect(
+        cls, leaf_stats: "dict[str, WVStats]", n_cells: int
+    ) -> "DeployReport":
+        """Device-side report accumulation with exactly ONE host sync.
+
+        All reductions (per-leaf and aggregate) are jnp ops over the
+        still-on-device `WVStats` arrays; a single `pipeline.host_fetch`
+        (device_get) at the end transfers the handful of scalars.  This
+        is the batched-deployment stats contract (DESIGN.md Sec. 10):
+        nothing in the deploy loop blocks on the device.
+        """
+        if not leaf_stats:
+            return cls()
+        stats = list(leaf_stats.values())
+        its = jnp.concatenate([s.iterations for s in stats])
+        lat = jnp.concatenate([s.latency_ns for s in stats])
+        en = jnp.concatenate([s.energy_pj for s in stats])
+        rms2 = jnp.concatenate([s.rms_error_lsb**2 for s in stats])
+        agg = dict(
+            mean_iterations=jnp.mean(its),
+            total_latency_ns=jnp.sum(lat),
+            critical_latency_ns=jnp.max(lat),
+            total_energy_pj=jnp.sum(en),
+            rms_cell_error_lsb=jnp.sqrt(jnp.mean(rms2)),
+        )
+        per = {
+            name: dict(
+                mean_iterations=jnp.mean(s.iterations),
+                critical_latency_ns=jnp.max(s.latency_ns),
+                energy_pj=jnp.sum(s.energy_pj),
+                rms_cell_error_lsb=jnp.sqrt(jnp.mean(s.rms_error_lsb**2)),
+            )
+            for name, s in leaf_stats.items()
+        }
+        agg_h, per_h = pipeline.host_fetch((agg, per))
+        report = cls(
+            num_columns=sum(int(s.iterations.shape[0]) for s in stats),
+            num_cells=sum(int(s.iterations.shape[0]) * n_cells for s in stats),
+            **{k: float(v) for k, v in agg_h.items()},
+        )
+        report.leaves = {
+            name: dict(
+                columns=int(leaf_stats[name].iterations.shape[0]),
+                **{k: float(v) for k, v in d.items()},
+            )
+            for name, d in per_h.items()
+        }
+        return report
 
     def merge(self, name: str, stats: WVStats, n_cells: int) -> None:
         c = int(stats.iterations.shape[0])
@@ -172,6 +231,58 @@ class DeployedModel:
         return sum(int(a.g.shape[0]) for a in self.arrays.values())
 
 
+@dataclasses.dataclass
+class _LeafPlan:
+    """One eligible leaf, quantized and packed, awaiting programming."""
+
+    name: str
+    leaf: jax.Array
+    cols: jax.Array           # (C, N) packed target levels
+    layout: PackedLayout
+    scale: jax.Array
+    uid_base: int             # first global column uid of this leaf
+
+    def state(self, g: jax.Array, d2d: jax.Array) -> ArrayState:
+        return ArrayState(
+            g=g, targets=self.cols, d2d=d2d, scale=self.scale,
+            layout=self.layout, shape=self.leaf.shape, dtype=self.leaf.dtype,
+        )
+
+
+def _plan_leaf(name, w, wv_cfg, q_cfg, uid_base) -> _LeafPlan:
+    w2 = w.reshape((-1, w.shape[-1]))
+    q, scale = quantize_weight(w2, q_cfg)
+    cols, layout = pack_columns(q, wv_cfg.n_cells, q_cfg.cell_bits, q_cfg.slices)
+    return _LeafPlan(name, w, cols, layout, scale, uid_base)
+
+
+def _program_plan(
+    key: jax.Array, plan: _LeafPlan, wv_cfg: WVConfig, cost: CircuitCost | None
+) -> tuple[ArrayState, WVStats]:
+    """Program one planned leaf on its own (the per-leaf baseline path).
+
+    Columns draw from per-column sub-streams ``fold_in(key, uid)``
+    (DESIGN.md Sec. 10), with d2d sampled from the same split the engine
+    would use — so the result is bit-identical to programming the same
+    uids inside a bucketed multi-leaf dispatch.
+    """
+    cols = plan.cols
+    col_ids = plan.uid_base + jnp.arange(cols.shape[0], dtype=jnp.int32)
+    d2d = pipeline.sample_d2d_for(key, col_ids, cols.shape, wv_cfg.device)
+    # Dispatch through the shared jitted entry so the math is compiled
+    # identically to the bucketed path (jit-vs-eager rounding differs at
+    # the ulp level); the per-leaf cost profile — one trace per leaf
+    # shape, per-leaf host syncs in the caller — is unchanged.  The
+    # entry donates its targets/d2d buffers off-CPU, and both must
+    # survive as ArrayState, so pass copies there.
+    fn = pipeline.get_program_fn(wv_cfg, cost if cost is not None else CircuitCost())
+    if pipeline.donates():
+        g, stats = fn(key, jnp.copy(cols), jnp.copy(d2d), col_ids)
+    else:
+        g, stats = fn(key, cols, d2d, col_ids)
+    return plan.state(g, d2d), stats
+
+
 def _program_leaf(
     key: jax.Array,
     w: jax.Array,
@@ -179,24 +290,8 @@ def _program_leaf(
     q_cfg: QuantConfig,
     cost: CircuitCost | None,
 ) -> tuple[ArrayState, WVStats]:
-    """Quantize, pack, and program one weight leaf; keep the array state.
-
-    The d2d field is sampled here from the same key split
-    `program_columns` would use internally, so dense-path results are
-    bit-identical to the pre-`ArrayState` implementation.
-    """
-    shape = w.shape
-    w2 = w.reshape((-1, shape[-1]))
-    q, scale = quantize_weight(w2, q_cfg)
-    cols, layout = pack_columns(q, wv_cfg.n_cells, q_cfg.cell_bits, q_cfg.slices)
-    k_d2d, _, _ = jax.random.split(key, 3)
-    d2d = dev_mod.sample_d2d(k_d2d, cols.shape, wv_cfg.device)
-    g, stats = program_columns(key, cols, wv_cfg, cost=cost, d2d=d2d)
-    state = ArrayState(
-        g=g, targets=cols, d2d=d2d, scale=scale, layout=layout,
-        shape=shape, dtype=w.dtype,
-    )
-    return state, stats
+    """Quantize, pack, and program one weight leaf; keep the array state."""
+    return _program_plan(key, _plan_leaf("", w, wv_cfg, q_cfg, 0), wv_cfg, cost)
 
 
 def deploy_matrix(
@@ -243,12 +338,24 @@ def deploy_arrays(
     *,
     deploy_embeddings: bool = False,
     predicate: Callable[[str, jax.Array], bool] | None = None,
+    batched: bool = True,
+    mesh: Any | None = None,
+    min_bucket: int = pipeline.DEFAULT_MIN_BUCKET,
+    max_bucket: int = pipeline.DEFAULT_MAX_BUCKET,
 ) -> tuple[DeployedModel, DeployReport]:
     """Program every eligible weight leaf, keeping persistent array state.
 
     Returns (DeployedModel, DeployReport).  Same eligibility policy as
     `deploy_params`; `DeployedModel.materialize()` reproduces exactly
     what `deploy_params` would have returned for the same key.
+
+    `batched=True` (default) routes ALL leaves' packed columns through
+    the bucketed pipeline (`core.pipeline`): one jitted, donated
+    `program_columns` dispatch per shape bucket, stats accumulated
+    device-side with a single host sync, and the column axis optionally
+    sharded over `mesh`.  `batched=False` is the per-leaf baseline path
+    (one dispatch + per-leaf host syncs); both paths draw per-column RNG
+    sub-streams, so their results are bit-identical.
     """
     if q_cfg is None:
         q_cfg = QuantConfig(
@@ -256,22 +363,38 @@ def deploy_arrays(
         )
     if cost is None:
         cost = CircuitCost()
-    report = DeployReport()
     records, treedef = _eligible_leaves(params, deploy_embeddings, predicate)
     leaves: list = []
     slots: dict[str, int] = {}
-    arrays: dict[str, ArrayState] = {}
+    plans: list[_LeafPlan] = []
+    uid = 0
     for i, name, leaf, eligible in records:
         if not eligible:
             leaves.append(leaf)
             continue
-        state, stats = _program_leaf(
-            jax.random.fold_in(key, i), leaf, wv_cfg, q_cfg, cost
-        )
-        report.merge(name, stats, wv_cfg.n_cells)
+        plan = _plan_leaf(name, leaf, wv_cfg, q_cfg, uid)
+        uid += int(plan.cols.shape[0])
         slots[name] = len(leaves)
-        arrays[name] = state
+        plans.append(plan)
         leaves.append(None)
+
+    arrays: dict[str, ArrayState] = {}
+    if batched:
+        g_blocks, stats_blocks, d2d_blocks = pipeline.program_packed_columns(
+            key, [p.cols for p in plans], wv_cfg, cost,
+            mesh=mesh, min_bucket=min_bucket, max_bucket=max_bucket,
+        )
+        for plan, g, st, d2d in zip(plans, g_blocks, stats_blocks, d2d_blocks):
+            arrays[plan.name] = plan.state(g, d2d)
+        report = DeployReport.collect(
+            {p.name: s for p, s in zip(plans, stats_blocks)}, wv_cfg.n_cells
+        )
+    else:
+        report = DeployReport()
+        for plan in plans:
+            state, stats = _program_plan(key, plan, wv_cfg, cost)
+            report.merge(plan.name, stats, wv_cfg.n_cells)
+            arrays[plan.name] = state
     return (
         DeployedModel(
             treedef=treedef, leaves=leaves, slots=slots, arrays=arrays,
@@ -290,6 +413,8 @@ def deploy_params(
     *,
     deploy_embeddings: bool = False,
     predicate: Callable[[str, jax.Array], bool] | None = None,
+    batched: bool = True,
+    mesh: Any | None = None,
 ) -> tuple[Any, DeployReport]:
     """Program every eligible weight leaf of a parameter pytree.
 
@@ -299,22 +424,12 @@ def deploy_params(
 
     This is the dense one-shot path: array state is collapsed to weights
     immediately.  Use `deploy_arrays` when the conductances must stay
-    live (lifetime simulation, refresh).
+    live (lifetime simulation, refresh).  Programming itself is shared
+    with `deploy_arrays` (bucketed pipeline by default).
     """
-    if q_cfg is None:
-        q_cfg = QuantConfig(
-            weight_bits=wv_cfg.weight_bits, cell_bits=wv_cfg.device.bc
-        )
-    report = DeployReport()
-    records, treedef = _eligible_leaves(params, deploy_embeddings, predicate)
-    out = []
-    for i, name, leaf, eligible in records:
-        if not eligible:
-            out.append(leaf)
-            continue
-        state, stats = _program_leaf(
-            jax.random.fold_in(key, i), leaf, wv_cfg, q_cfg, cost
-        )
-        report.merge(name, stats, wv_cfg.n_cells)
-        out.append(state.materialize().astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, out), report
+    deployed, report = deploy_arrays(
+        key, params, wv_cfg, q_cfg, cost,
+        deploy_embeddings=deploy_embeddings, predicate=predicate,
+        batched=batched, mesh=mesh,
+    )
+    return deployed.materialize(), report

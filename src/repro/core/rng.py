@@ -1,0 +1,75 @@
+"""Per-column PRNG sub-streams for batched programming (DESIGN.md Sec. 10).
+
+The WV engine historically drew every stochastic field with the batch
+shape baked into the call (``normal(key, (C, N))``), which welds the
+noise stream to the exact column batch: programming a leaf alone and
+programming it inside a concatenated multi-leaf bucket produce different
+draws, so a bucketed deployment could never be bit-compared against the
+per-leaf path.
+
+The batched pipeline instead gives every physical column its own key,
+
+    col_key[c] = fold_in(master_key, col_uid[c])
+
+and draws each column's fields from its own stream (``vmap`` of the
+per-column sampler).  A column's realization then depends only on
+(master key, column uid) — not on which bucket it rode in, how much
+padding sat next to it, or how many other leaves were batched along —
+which is what makes `DeployedModel.materialize()` bit-identical between
+the per-leaf and bucketed deployment paths.
+
+These helpers mirror `jax.random.split` / `fold_in` / `normal` but
+transparently accept either a single key or a 1-D batch of keys (both
+classic ``uint32[2]`` keys and new-style typed key arrays).  All engine
+sampling sites route through them, so `program_columns` supports both
+RNG policies with one code path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["batch_ndim", "fold_col_keys", "split", "fold_in", "normal"]
+
+
+def batch_ndim(key: jax.Array) -> int:
+    """Number of leading batch axes on a key (0 = single key)."""
+    if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return key.ndim
+    return key.ndim - 1
+
+
+def fold_col_keys(key: jax.Array, col_ids: jax.Array) -> jax.Array:
+    """Derive one key per column: ``fold_in(key, col_ids[c])``."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(col_ids)
+
+
+def split(key: jax.Array, num: int = 2) -> tuple[jax.Array, ...]:
+    """`jax.random.split`, element-wise over a key batch if present."""
+    if batch_ndim(key):
+        ks = jax.vmap(lambda k: jax.random.split(k, num))(key)
+        return tuple(ks[:, j] for j in range(num))
+    ks = jax.random.split(key, num)
+    return tuple(ks[j] for j in range(num))
+
+
+def fold_in(key: jax.Array, data) -> jax.Array:
+    """`jax.random.fold_in` with the same scalar over a key batch."""
+    if batch_ndim(key):
+        return jax.vmap(lambda k: jax.random.fold_in(k, data))(key)
+    return jax.random.fold_in(key, data)
+
+
+def normal(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    """Normal draw of `shape`; a key batch owns the leading axis.
+
+    With a single key this is exactly ``jax.random.normal(key, shape)``.
+    With a batch of C keys, `shape` must lead with C and each column
+    draws its ``shape[1:]`` tail from its own stream.
+    """
+    if batch_ndim(key):
+        assert shape[0] == key.shape[0], (shape, key.shape)
+        tail = tuple(shape[1:])
+        return jax.vmap(lambda k: jax.random.normal(k, tail, dtype))(key)
+    return jax.random.normal(key, shape, dtype)

@@ -121,7 +121,13 @@ class WVConfig:
     device: DeviceConfig = dataclasses.field(default_factory=DeviceConfig)
     adc: ADCConfig = dataclasses.field(default_factory=ADCConfig)
     noise: NoiseConfig = dataclasses.field(default_factory=NoiseConfig)
-    use_pallas: bool = False         # route FWHT/decide through Pallas kernels
+    # Route the Hadamard decode through the Pallas FWHT kernel AND the
+    # fine-WV cell update (threshold -> streak -> freeze -> pulse-size ->
+    # device-step) through the fused Pallas wv_step kernel: one VMEM pass
+    # instead of ~6 materialized (C, N) intermediates per iteration.
+    # Bit-identical to the unfused path (write noise is pre-sampled from
+    # the same key splits); kernels run interpreted off-TPU.
+    use_pallas: bool = False
 
     @property
     def slices_per_weight(self) -> int:

@@ -43,10 +43,11 @@ from . import adc as adc_mod
 from . import device as dev_mod
 from . import hadamard as hd
 from . import noise as noise_mod
+from . import rng
 from .cost import CircuitCost, read_phase_cost, write_phase_cost
 from .types import WVConfig, WVMethod
 
-__all__ = ["WVStats", "program_columns", "verify_sweep"]
+__all__ = ["WVStats", "program_columns", "verify_aggregate", "verify_sweep"]
 
 
 class WVStats(NamedTuple):
@@ -69,19 +70,27 @@ def _fwht(x: jax.Array, cfg: WVConfig) -> jax.Array:
     return hd.fwht(x)
 
 
-def verify_sweep(
+def verify_aggregate(
     key: jax.Array, g: jax.Array, targets: jax.Array, cfg: WVConfig
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """One verification sweep for a batch of columns.
+) -> tuple[jax.Array, jax.Array, jax.Array, float]:
+    """One verification sweep, stopping BEFORE the ternary threshold.
+
+    The pre-threshold aggregate is what the fused Pallas cell-update
+    kernel consumes (it applies the threshold in VMEM); `verify_sweep`
+    applies it in jnp for the unfused path.  `key` may be a batch of
+    per-column keys (batched-pipeline RNG policy).
 
     Returns:
-      decision: (C, N) in {-1, 0, +1} = sign of estimated (g - w*) beyond
-        the threshold; +1 means conductance too HIGH (needs RESET).
+      agg:      (C, N) decision aggregate — the decoded deviation for
+        magnitude methods, the comparator sign for CW-SC, the
+        unnormalized s_w = H^T s_y for HARP.
       dev_mag:  (C, N) |deviation| estimate in LSB for magnitude methods
         (pulse sizing); 1.0 placeholder for ternary methods.
       n_compares: (C, N) comparator operations (compare modes) else zeros.
+      threshold: static decision threshold such that
+        decision = sign(agg) * (|agg| > threshold).
     """
-    dev_cfg, noise_cfg, a = cfg.device, cfg.noise, cfg.adc
+    noise_cfg, a = cfg.noise, cfg.adc
     n, levels = cfg.n_cells, cfg.device.levels
     thr = cfg.decision_threshold_lsb
     c = g.shape[0]
@@ -91,20 +100,21 @@ def verify_sweep(
         y = g + nz
         t_grid = adc_mod.sar_read(targets, a, n, levels, centered=False)
         sign, n_cmp = adc_mod.compare_read(y, t_grid, thr)
-        return sign, jnp.ones_like(g), n_cmp
+        # The comparator already made the ternary call; 0.5 re-thresholds
+        # its {-1, 0, +1} output to itself.
+        return sign, jnp.ones_like(g), n_cmp, 0.5
 
     if cfg.method == WVMethod.MRA:
         m = cfg.mra_reads
-        k_uc, k_cm = jax.random.split(key)
-        n_uc = noise_cfg.sigma_uc_lsb * jax.random.normal(k_uc, (c, m, n))
-        mu_cm = noise_cfg.sigma_cm_lsb * jax.random.normal(k_cm, (c, 1, 1))
+        k_uc, k_cm = rng.split(key)
+        n_uc = noise_cfg.sigma_uc_lsb * rng.normal(k_uc, (c, m, n))
+        mu_cm = noise_cfg.sigma_cm_lsb * rng.normal(k_cm, (c, 1, 1))
         reads = adc_mod.sar_read(
             g[:, None, :] + n_uc + mu_cm, a, n, levels, centered=False
         )
         w_hat = jnp.mean(reads, axis=1)
         dev = w_hat - targets
-        sign = jnp.where(dev > thr, 1.0, jnp.where(dev < -thr, -1.0, 0.0))
-        return sign, jnp.abs(dev), jnp.zeros_like(g)
+        return dev, jnp.abs(dev), jnp.zeros_like(g), thr
 
     # Hadamard-domain methods: physical read is y = H g + noise.
     y_true = _fwht(g, cfg)
@@ -120,8 +130,7 @@ def verify_sweep(
         )
         w_hat = _fwht(y_q, cfg) / n  # inverse decode (eq. 6), digital adders
         dev = w_hat - targets
-        sign = jnp.where(dev > thr, 1.0, jnp.where(dev < -thr, -1.0, 0.0))
-        return sign, jnp.abs(dev), jnp.zeros_like(g)
+        return dev, jnp.abs(dev), jnp.zeros_like(g), thr
 
     if cfg.method == WVMethod.HARP:
         y_star = _fwht(targets, cfg)
@@ -132,12 +141,29 @@ def verify_sweep(
         )
         s_y, n_cmp = adc_mod.compare_read(y, y_star_grid, thr)
         s_w = _fwht(s_y, cfg)  # unnormalized H^T s_y (eq. 10)
-        sign = jnp.where(
-            s_w > cfg.tau_w, 1.0, jnp.where(s_w < -cfg.tau_w, -1.0, 0.0)
-        )
-        return sign, jnp.ones_like(g), n_cmp
+        return s_w, jnp.ones_like(g), n_cmp, cfg.tau_w
 
     raise ValueError(cfg.method)
+
+
+def _threshold(agg: jax.Array, thr: float) -> jax.Array:
+    return jnp.where(agg > thr, 1.0, jnp.where(agg < -thr, -1.0, 0.0))
+
+
+def verify_sweep(
+    key: jax.Array, g: jax.Array, targets: jax.Array, cfg: WVConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One verification sweep for a batch of columns.
+
+    Returns:
+      decision: (C, N) in {-1, 0, +1} = sign of estimated (g - w*) beyond
+        the threshold; +1 means conductance too HIGH (needs RESET).
+      dev_mag:  (C, N) |deviation| estimate in LSB for magnitude methods
+        (pulse sizing); 1.0 placeholder for ternary methods.
+      n_compares: (C, N) comparator operations (compare modes) else zeros.
+    """
+    agg, dev_mag, n_cmp, thr = verify_aggregate(key, g, targets, cfg)
+    return _threshold(agg, thr), dev_mag, n_cmp
 
 
 def _characterized_coarse_pulses(
@@ -148,29 +174,26 @@ def _characterized_coarse_pulses(
     Real WV controllers derive open-loop pulse counts from the device's
     programming look-up table (NeuroSim-style cumulative SET curve), not
     from target/step — otherwise the nonlinear taper near LRS leaves a
-    large systematic undershoot at high levels.  We simulate the noiseless
-    cumulative response and take, per cell, the pulse count whose nominal
-    landing point is nearest the target.
+    large systematic undershoot at high levels.  The nominal curve starts
+    from g = 0 for EVERY cell, so one scalar (P+1,) landing trajectory
+    characterizes the whole batch; the per-cell argmin is a broadcast
+    against the targets, not a (P, C, N) scan.
     """
     from .device import _effective_step
 
-    def body(carry, _):
-        g_nom = carry
+    def body(g_nom, _):
         g_next = jnp.clip(
-            g_nom
-            + _effective_step(
-                g_nom, jnp.ones_like(g_nom), dev_cfg, dev_cfg.coarse_step_lsb
-            ),
+            g_nom + _effective_step(g_nom, 1.0, dev_cfg, dev_cfg.coarse_step_lsb),
             0.0,
             dev_cfg.g_max_lsb,
         )
         return g_next, g_next
 
-    g0 = jnp.zeros_like(targets)
+    g0 = jnp.zeros((), jnp.float32)
     _, traj = jax.lax.scan(body, g0, None, length=max_pulses)
-    # traj: (max_pulses, ...) nominal conductance after p+1 pulses.
-    landings = jnp.concatenate([g0[None], traj], axis=0)  # (P+1, ...)
-    err = jnp.abs(landings - targets[None])
+    # landings[p] = nominal conductance after p pulses, shape (P+1,).
+    landings = jnp.concatenate([g0[None], traj], axis=0)
+    err = jnp.abs(landings.reshape((-1,) + (1,) * targets.ndim) - targets[None])
     return jnp.argmin(err, axis=0).astype(jnp.float32)
 
 
@@ -192,6 +215,7 @@ def program_columns(
     cfg: WVConfig,
     cost: CircuitCost | None = None,
     d2d: jax.Array | None = None,
+    col_ids: jax.Array | None = None,
 ) -> tuple[jax.Array, WVStats]:
     """Program a batch of columns from HRS to integer target levels.
 
@@ -201,6 +225,14 @@ def program_columns(
       cfg: WV configuration (method, noise, ADC, device).
       cost: circuit cost constants (Table 1 defaults if None).
       d2d: optional pre-sampled (C, N) device-to-device efficiency.
+      col_ids: optional (C,) int32 per-column stream ids.  When given,
+        every column draws its noise from its own sub-stream
+        ``fold_in(key, col_ids[c])`` (DESIGN.md Sec. 10), making the
+        result per-column independent of batch composition/padding —
+        the contract the bucketed deployment pipeline relies on.  When
+        None, the legacy batch-shaped draws are used (same key schedule
+        as pre-pipeline behaviour; the write-noise multiply was
+        reassociated, so results match to the ulp, not bit-exactly).
 
     Returns (g_final, WVStats).
     """
@@ -211,7 +243,11 @@ def program_columns(
     assert n == cfg.n_cells, (n, cfg.n_cells)
     dev_cfg = cfg.device
 
-    k_d2d, k_coarse, k_loop = jax.random.split(key, 3)
+    if col_ids is None:
+        k_d2d, k_coarse, k_loop = jax.random.split(key, 3)
+    else:
+        col_keys = rng.fold_col_keys(key, col_ids)
+        k_d2d, k_coarse, k_loop = rng.split(col_keys, 3)
     if d2d is None:
         d2d = dev_mod.sample_d2d(k_d2d, targets.shape, dev_cfg)
 
@@ -237,47 +273,84 @@ def program_columns(
     reads_per_sweep = (
         cfg.mra_reads * n if cfg.method == WVMethod.MRA else n
     )
+    # Freeze warmup (Sec. 3.1): streaks don't bite during the coarse-
+    # residual transient; see types.WVConfig.freeze_warmup_iters.
+    warmup = cfg.freeze_warmup_iters + (
+        cfg.freeze_warmup_ternary_extra if ternary else 0
+    )
 
     def body(st: _LoopState) -> _LoopState:
-        k_it = jax.random.fold_in(k_loop, st.it)
-        k_v, k_w = jax.random.split(k_it)
+        k_it = rng.fold_in(k_loop, st.it)
+        k_v, k_w = rng.split(k_it)
         col_active = ~jnp.all(st.frozen, axis=-1)  # (C,)
 
-        decision, dev_mag, n_cmp = verify_sweep(k_v, st.g, targets, cfg)
-        # Streak / freeze (Sec. 3.1): K consecutive in-threshold verifies.
-        in_thr = decision == 0.0
-        streak = jnp.where(in_thr, st.streak + 1, 0)
-        # K consecutive within-threshold verifies freeze a cell (Sec. 3.1),
-        # gated behind the warmup (streaks don't bite during the coarse-
-        # residual transient; see types.WVConfig.freeze_warmup_iters).
-        warmup = cfg.freeze_warmup_iters + (
-            cfg.freeze_warmup_ternary_extra if ternary else 0
-        )
+        agg, dev_mag, n_cmp, thr = verify_aggregate(k_v, st.g, targets, cfg)
         can_freeze = st.it >= warmup
-        frozen = st.frozen | (can_freeze & (streak >= cfg.k_streak))
 
-        # Pulse sizing: ternary methods use single fine pulses; magnitude
-        # methods apply round(|dev| / step) pulses (capped).
-        if ternary:
-            n_p = jnp.ones_like(st.g)
-        else:
-            n_p = jnp.clip(
-                jnp.round(dev_mag / dev_cfg.fine_step_lsb),
-                1.0,
-                float(cfg.max_pulses_per_iter),
+        if cfg.use_pallas:
+            # Fused verify-tail + write: threshold -> streak -> freeze ->
+            # pulse-size -> device-step -> clip in ONE VMEM pass (the
+            # kernel is deterministic: write noise is pre-sampled here
+            # from the same key splits `apply_pulses` uses, so fused and
+            # unfused paths are bit-identical).  `can_freeze` is static
+            # inside the kernel; the warmup boundary picks between two
+            # kernel instances via lax.cond.
+            from repro.kernels.wv_step import ops as wv_ops
+            from repro.kernels.wv_step.ref import WVCellParams
+
+            c2c, nmap = dev_mod.sample_write_noise(k_w, st.g.shape, dev_cfg)
+
+            def upd(cf: bool):
+                p = WVCellParams(
+                    threshold=thr,
+                    k_streak=cfg.k_streak,
+                    can_freeze=cf,
+                    ternary=ternary,
+                    fine_step=dev_cfg.fine_step_lsb,
+                    max_pulses=float(cfg.max_pulses_per_iter),
+                    g_max=dev_cfg.g_max_lsb,
+                    nonlinearity=dev_cfg.nonlinearity,
+                    reset_asymmetry=dev_cfg.reset_asymmetry,
+                    nmap_sqrt_pulses=dev_cfg.map_noise_mode == "pulse",
+                )
+                return wv_ops.wv_cell_update(
+                    agg, dev_mag, st.g, st.streak, st.frozen, c2c, nmap, d2d, p
+                )
+
+            g, streak, frozen, n_p, direction = jax.lax.cond(
+                can_freeze, lambda: upd(True), lambda: upd(False)
             )
-        act_cell = (~st.frozen) & (decision != 0.0) & col_active[:, None]
-        n_p = jnp.where(act_cell, n_p, 0.0)
-        direction = jnp.where(act_cell, -decision, 0.0)  # too high -> RESET
+        else:
+            decision = _threshold(agg, thr)
+            # Streak / freeze (Sec. 3.1): K consecutive in-threshold
+            # verifies freeze a cell, gated behind the warmup.
+            in_thr = decision == 0.0
+            streak = jnp.where(in_thr, st.streak + 1, 0)
+            frozen = st.frozen | (can_freeze & (streak >= cfg.k_streak))
 
-        g_new = dev_mod.apply_pulses(k_w, st.g, direction, n_p, d2d, dev_cfg)
+            # Pulse sizing: ternary methods use single fine pulses;
+            # magnitude methods apply round(|dev| / step) pulses (capped).
+            if ternary:
+                n_p = jnp.ones_like(st.g)
+            else:
+                n_p = jnp.clip(
+                    jnp.round(dev_mag / dev_cfg.fine_step_lsb),
+                    1.0,
+                    float(cfg.max_pulses_per_iter),
+                )
+            act_cell = (~st.frozen) & (decision != 0.0) & col_active[:, None]
+            n_p = jnp.where(act_cell, n_p, 0.0)
+            direction = jnp.where(act_cell, -decision, 0.0)  # too high -> RESET
+
+            g_new = dev_mod.apply_pulses(k_w, st.g, direction, n_p, d2d, dev_cfg)
+            g = jnp.where(col_active[:, None], g_new, st.g)
 
         # Cost accounting (active columns only).
         lat_r, en_r = read_phase_cost(cfg, cost, n_compares=n_cmp if ternary else None)
         lat_w, en_w = write_phase_cost(st.g, n_p, direction, dev_cfg, cost)
         actf = col_active.astype(jnp.float32)
         return _LoopState(
-            g=jnp.where(col_active[:, None], g_new, st.g),
+            g=g,
             streak=streak,
             frozen=frozen,
             it=st.it + 1,

@@ -31,6 +31,10 @@ class WVCellParams(NamedTuple):
     g_max: float
     nonlinearity: float
     reset_asymmetry: float
+    # "pulse"-mode mapping noise (core.device): nmap carries the
+    # single-pulse sigma and the burst accumulates as a random walk, so
+    # the applied noise scales with sqrt(n_pulses).  Off = "event" mode.
+    nmap_sqrt_pulses: bool = False
 
 
 def wv_cell_update(
@@ -67,6 +71,8 @@ def wv_cell_update(
     reset_eff = frac ** p.nonlinearity * p.reset_asymmetry
     eff = jnp.where(direction > 0, set_eff, reset_eff)
     delta = direction * p.fine_step * eff * d2d * n_p * c2c
+    if p.nmap_sqrt_pulses:
+        nmap = nmap * jnp.sqrt(jnp.maximum(n_p, 1.0))
     g_new = jnp.clip(g + delta + jnp.where(n_p > 0, nmap, 0.0), 0.0, p.g_max)
     g_new = jnp.where(n_p > 0, g_new, g)
     return g_new, streak_new, frozen_new, n_p, direction

@@ -63,8 +63,11 @@ def _wv_kernel(
     reset_eff = frac ** p.nonlinearity * p.reset_asymmetry
     eff = jnp.where(direction > 0, set_eff, reset_eff)
     delta = direction * p.fine_step * eff * d2d_ref[...] * n_p * c2c_ref[...]
+    nmap = nmap_ref[...]
+    if p.nmap_sqrt_pulses:
+        nmap = nmap * jnp.sqrt(jnp.maximum(n_p, 1.0))
     g_new = jnp.clip(
-        g + delta + jnp.where(n_p > 0, nmap_ref[...], 0.0), 0.0, p.g_max
+        g + delta + jnp.where(n_p > 0, nmap, 0.0), 0.0, p.g_max
     )
     g_out[...] = jnp.where(n_p > 0, g_new, g)
     streak_out[...] = streak_new

@@ -80,21 +80,44 @@ def run_dryrun(method: str, n_columns: int, use_pallas: bool, out_dir: str):
     print("  memory_analysis:", mem)
 
 
-def run_real(method: str, arch: str):
+def run_real(method: str, arch: str, baseline: bool = False):
+    """Program a smoke-config model end-to-end.
+
+    Default: the bucketed whole-model pipeline (one jitted dispatch per
+    column bucket, device-side stats, column axis sharded over all local
+    devices when there are several).  `--baseline` forces the per-leaf
+    path for comparison.
+    """
+    import time
+
     from repro.configs import get_smoke_config
+    from repro.core import pipeline
     from repro.core.programmer import deploy_params
     from repro.models import init_params
 
     cfg = get_smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    mesh = None
+    if not baseline and jax.device_count() > 1:
+        mesh = jax.make_mesh((jax.device_count(),), ("cols",))
+    pipeline.reset_counters()
+    t0 = time.perf_counter()
     prog, report = deploy_params(
-        jax.random.PRNGKey(1), params, WVConfig(method=WVMethod(method))
+        jax.random.PRNGKey(1), params, WVConfig(method=WVMethod(method)),
+        batched=not baseline, mesh=mesh,
+    )
+    dt = time.perf_counter() - t0
+    path = "per-leaf baseline" if baseline else (
+        f"bucketed pipeline ({pipeline.compile_count()} compiles, "
+        f"{pipeline.host_sync_count()} host sync)"
     )
     print(
-        f"programmed {arch} (smoke) with {method}: {report.num_cells:,} cells, "
+        f"programmed {arch} (smoke) with {method} [{path}]: "
+        f"{report.num_cells:,} cells, "
         f"{report.num_columns:,} columns, rms={report.rms_cell_error_lsb:.3f} LSB, "
         f"mean iters={report.mean_iterations:.1f}, "
-        f"energy={report.total_energy_pj / 1e6:.2f} uJ"
+        f"energy={report.total_energy_pj / 1e6:.2f} uJ, "
+        f"{report.num_columns / dt:,.0f} columns/s"
     )
 
 
@@ -105,13 +128,15 @@ def main():
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="per-leaf deployment path (vs bucketed pipeline)")
     ap.add_argument("--columns", type=int, default=1 << 22)
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
     if args.dryrun:
         run_dryrun(args.method, args.columns, args.pallas, args.out)
     else:
-        run_real(args.method, args.arch)
+        run_real(args.method, args.arch, baseline=args.baseline)
 
 
 if __name__ == "__main__":

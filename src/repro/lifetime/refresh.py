@@ -21,24 +21,26 @@ Three policies, each cost-accounted through `core.cost` so that
 
 Re-programming subsets: flagged column counts vary per epoch, so naive
 re-tracing would recompile `program_columns` for every new count.  The
-subset is padded to the next power of two (re-using column 0 as filler)
-and compiled functions are cached per (config, shape) — at most
-log2(C)+1 compilations per method over a whole simulation.
+subset is padded to the next power of two and dispatched through the
+shared batched-programming entry point (`core.pipeline.get_program_fn`)
+— the SAME jit cache the deployment pipeline uses, so a refresh after a
+deploy hits warm compiles and the whole simulation stays at most
+log2(C)+1 compilations per method.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import pipeline
 from repro.core.cost import CircuitCost, read_phase_cost
 from repro.core.types import WVConfig, WVMethod
-from repro.core.wv import program_columns, verify_sweep
+from repro.core.wv import verify_sweep
 
 from .drift import CellState, DriftConfig, effective_d2d, reset_programmed
 
@@ -158,20 +160,6 @@ def flag_columns(
     return bad > rc.max_bad_cells, sweeps
 
 
-# (method, n_cells, shape, ...) -> compiled program fn; configs hash by
-# value (frozen dataclasses), so the cache is shared across epochs.
-_PROGRAM_CACHE: dict = {}
-
-
-def _program_fn(cfg: WVConfig, cost: CircuitCost):
-    key = (cfg, cost)
-    fn = _PROGRAM_CACHE.get(key)
-    if fn is None:
-        fn = jax.jit(partial(program_columns, cfg=cfg, cost=cost))
-        _PROGRAM_CACHE[key] = fn
-    return fn
-
-
 def _pad_pow2(idx: np.ndarray, c: int) -> np.ndarray:
     """Pad a flagged-index set to the next power of two (capped at C)."""
     n = len(idx)
@@ -212,7 +200,13 @@ def _reprogram_subset(
     sub_targets = targets[idx_p]
     sub_d2d = effective_d2d(state, drift_cfg)[idx_p]
     k_prog, k_state = jax.random.split(key)
-    g_sub, stats = _program_fn(cfg, cost)(k_prog, sub_targets, d2d=sub_d2d)
+    # Shared batched entry point (one compile cache with deployment);
+    # col_ids are the physical column indices, so each column's refresh
+    # noise stream is independent of which other columns were flagged.
+    fn = pipeline.get_program_fn(cfg, cost)
+    g_sub, stats = fn(
+        k_prog, sub_targets, sub_d2d, jnp.asarray(idx_p, jnp.int32)
+    )
 
     # Scatter back; idx_p = [idx, filler], so rows 0..len(idx)-1 are the
     # real flagged columns and filler rows are discarded duplicates.

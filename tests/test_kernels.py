@@ -71,11 +71,12 @@ def _wv_args(c, n, seed=0):
 @pytest.mark.parametrize("c,n", [(16, 32), (300, 32), (128, 64), (64, 128)])
 @pytest.mark.parametrize("ternary", [True, False])
 @pytest.mark.parametrize("can_freeze", [True, False])
-def test_wv_step_sweep(c, n, ternary, can_freeze):
+@pytest.mark.parametrize("nmap_sqrt", [True, False])
+def test_wv_step_sweep(c, n, ternary, can_freeze, nmap_sqrt):
     p = WVCellParams(
         threshold=4.0 if ternary else 0.5, k_streak=2, can_freeze=can_freeze,
         ternary=ternary, fine_step=0.25, max_pulses=16.0, g_max=7.0,
-        nonlinearity=0.35, reset_asymmetry=0.85,
+        nonlinearity=0.35, reset_asymmetry=0.85, nmap_sqrt_pulses=nmap_sqrt,
     )
     args = _wv_args(c, n)
     outs_k = wv_ops.wv_cell_update(*args, p)
