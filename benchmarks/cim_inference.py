@@ -1,0 +1,169 @@
+"""Analog compute-in-memory serving: end-task accuracy vs read noise.
+
+The closing of the paper's loop (DESIGN.md Sec. 11): Figs. 10-11 show
+programming error in the *cell* domain; this benchmark shows it where
+the paper says it matters — in logits computed *in* the array.  A tiny
+LM is trained, deployed once per WV method under severe verify-read
+noise (sigma = 0.7 LSB), then served through the analog path
+(bit-serial DAC -> in-array VMM -> per-slice ADC, `repro.cim`) across a
+sweep of inference read-noise levels.  Because CW-SC programs the
+arrays badly under verify noise while HD-PV/HARP program them well, the
+analog-served logits separate the methods even when all of them face
+identical inference noise.
+
+Metrics per (method, inference sigma): analog eval loss (dloss vs the
+clean digital model), logit RMSE vs clean digital logits, plus analog
+vs digital serving tokens/sec through the ServeEngine.  Emits
+``name,us_per_call,derived`` CSV rows and BENCH_cim.json
+(BENCH_cim_quick.json for the CI smoke run, which must not clobber the
+committed full-mode trajectory).
+
+Asserts (ISSUE 3 acceptance):
+* ideal analog (DAC/ADC -> infinity, noise -> 0) matches the digitally
+  materialized model to float tolerance;
+* HD-PV and HARP retain end-task accuracy through the analog path where
+  CW-SC degrades (logit-domain strictly; eval-loss with the same
+  noise-level tolerance band as fig10).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.cim import CIMConfig, CIMExecutor
+from repro.core import NoiseConfig, WVMethod, default_config_for_array
+from repro.core.programmer import deploy_arrays
+from repro.models.transformer import forward
+from repro.serving import ServeEngine
+
+from .common import emit
+from .fig10_robustness import _train_tiny_lm
+
+_VERIFY_SIGMA = 0.7  # severe verify-read noise (paper Fig. 10 regime)
+_IDEAL = CIMConfig(dac_bits=None, adc_bits=None, sigma_read_lsb=0.0)
+
+
+def _analog_cfg(sigma: float) -> CIMConfig:
+    return CIMConfig(dac_bits=6, adc_bits=10, sigma_read_lsb=sigma)
+
+
+def main(quick: bool = False) -> dict:
+    if quick:
+        methods = [WVMethod.CW_SC, WVMethod.HARP]
+        sigmas = (0.0, 0.7)
+        steps, gen_batch, gen_new = 120, 2, 4
+    else:
+        methods = [WVMethod.CW_SC, WVMethod.MRA, WVMethod.HD_PV, WVMethod.HARP]
+        sigmas = (0.0, 0.35, 0.7)
+        steps, gen_batch, gen_new = 220, 4, 8
+    cfg, params, eval_fn, eval_batch = _train_tiny_lm(steps=steps)
+    logits_fn = jax.jit(lambda p, b: forward(p, b, cfg)[0])
+    clean_loss = float(eval_fn(params, eval_batch))
+    clean_logits = logits_fn(params, eval_batch)
+    emit("cim.clean", 0.0, f"eval_loss={clean_loss:.4f}")
+
+    rows: dict[str, dict] = {}
+    dloss: dict[tuple[str, float], float] = {}
+    rmse: dict[tuple[str, float], float] = {}
+    deployments = {}
+    for m in methods:
+        wv = default_config_for_array(32).replace(
+            method=m, noise=NoiseConfig(sigma_read_lsb=_VERIFY_SIGMA)
+        )
+        deployed, report = deploy_arrays(jax.random.PRNGKey(42), params, wv)
+        deployments[m] = deployed
+        dig_loss = float(eval_fn(deployed.materialize(), eval_batch))
+        rows[f"{m.value}.deploy"] = dict(
+            rms_cell_error_lsb=report.rms_cell_error_lsb,
+            digital_loss=dig_loss,
+        )
+        for sigma in sigmas:
+            ex = CIMExecutor(deployed, _analog_cfg(sigma), jax.random.PRNGKey(7))
+            ap = ex.params()
+            loss = float(eval_fn(ap, eval_batch))
+            lg = logits_fn(ap, eval_batch)
+            err = float(
+                jnp.sqrt(jnp.mean((lg - clean_logits) ** 2))
+            )
+            dloss[(m.value, sigma)] = loss - clean_loss
+            rmse[(m.value, sigma)] = err
+            rows[f"{m.value}.analog.sigma{sigma:g}"] = dict(
+                eval_loss=loss, dloss=loss - clean_loss, logit_rmse=err
+            )
+            emit(
+                f"cim.{m.value}.sigma{sigma:g}", 0.0,
+                f"dloss={loss - clean_loss:+.4f} logit_rmse={err:.4f} "
+                f"rms_cell={report.rms_cell_error_lsb:.2f}",
+            )
+
+    # --- materialize-vs-analog equivalence contract (ideal converters)
+    harp = deployments[WVMethod.HARP]
+    ex0 = CIMExecutor(harp, _IDEAL, jax.random.PRNGKey(7))
+    ideal_loss = float(eval_fn(ex0.params(), eval_batch))
+    harp_dig = rows["harp.deploy"]["digital_loss"]
+    emit("cim.equivalence", 0.0,
+         f"ideal_analog={ideal_loss:.6f} digital={harp_dig:.6f}")
+    assert abs(ideal_loss - harp_dig) < 1e-4, (ideal_loss, harp_dig)
+
+    # --- serving throughput: analog vs digital decode through ServeEngine
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(5), (gen_batch, 8), 0, cfg.vocab_size
+    )
+    ex = CIMExecutor(harp, _analog_cfg(sigmas[-1]), jax.random.PRNGKey(9))
+    tput = {}
+    for name, engine in (
+        ("digital", ServeEngine(cfg, harp.materialize())),
+        ("analog", ServeEngine(cfg, executor=ex)),
+    ):
+        engine.generate(prompts, max_new=2)  # compile
+        t0 = time.perf_counter()
+        engine.generate(prompts, max_new=gen_new)
+        dt = time.perf_counter() - t0
+        tput[name] = gen_batch * gen_new / dt
+        emit(f"cim.serve.{name}", dt * 1e6, f"tok_per_s={tput[name]:.1f}")
+    lat_ns, e_pj = ex.token_cost()
+    rows["serving"] = dict(
+        digital_tok_per_s=tput["digital"],
+        analog_tok_per_s=tput["analog"],
+        planes_per_token=ex.planes,
+        array_latency_ns_per_token=lat_ns,
+        array_energy_pj_per_token=e_pj,
+    )
+    emit("cim.token_cost", 0.0,
+         f"latency={lat_ns:.0f}ns energy={e_pj / 1e3:.1f}nJ planes={ex.planes}")
+
+    # --- robustness contract: Hadamard-domain programming survives the
+    # analog readout where the one-hot baseline degrades.  Logit-domain
+    # strictly; end-task dloss with fig10's noise-level tolerance band.
+    hadamard = [m for m in (WVMethod.HD_PV, WVMethod.HARP) if m in deployments]
+    for sigma in sigmas:
+        for m in hadamard:
+            assert rmse[(m.value, sigma)] < rmse[("cw_sc", sigma)], (
+                m.value, sigma, rmse
+            )
+            assert dloss[(m.value, sigma)] < dloss[("cw_sc", sigma)] + 0.01, (
+                m.value, sigma, dloss
+            )
+
+    result = dict(
+        quick=quick,
+        verify_sigma=_VERIFY_SIGMA,
+        inference_sigmas=list(sigmas),
+        clean_loss=clean_loss,
+        **{f"{k}__{kk}": vv for k, v in rows.items() for kk, vv in v.items()},
+    )
+    name = "BENCH_cim_quick.json" if quick else "BENCH_cim.json"
+    out = pathlib.Path(__file__).with_name(name)
+    out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main(quick="--quick" in sys.argv)

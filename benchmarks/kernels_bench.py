@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.acim_vmm import ops as vmm_ops, ref as vmm_ref
+from repro.cim.mvm import cim_vmm
 from repro.kernels.fwht import ops as fwht_ops, ref as fwht_ref
 from repro.kernels.wv_step import ops as wv_ops, ref as wv_ref
 from repro.kernels.wv_step.ref import WVCellParams
@@ -51,15 +51,28 @@ def main() -> None:
     emit("kernels.wv_step_ref", us, f"C={C} N={N} kernel_maxerr={err:.1e}")
     assert err < 1e-4
 
+    # The shared CIM macro-readout entry (repro.cim.mvm.cim_vmm) — the
+    # exact code path analog serving runs per tile, pre-ADC read noise
+    # included — timed on the unfused reference and validated against
+    # the fused Pallas kernel (bit-identical by contract).
     xb = jax.random.normal(jax.random.PRNGKey(2), (128, 32))
     gp = jax.random.randint(jax.random.PRNGKey(3), (2, 32, 256), 0, 8).astype(jnp.float32)
     gn = jax.random.randint(jax.random.PRNGKey(4), (2, 32, 256), 0, 8).astype(jnp.float32)
-    ref_fn = jax.jit(lambda x, p_, n_: vmm_ref.acim_vmm(x, p_, n_, 3, 9, 448.0))
-    out_ref, us = timed(ref_fn, xb, gp, gn)
-    out_k = vmm_ops.acim_vmm(xb, gp, gn, bc=3, adc_bits=9, full_scale=448.0)
+    nz = 0.3 * jax.random.normal(jax.random.PRNGKey(5), (2, 128, 256))
+    ref_fn = jax.jit(
+        lambda x, p_, n_, z: cim_vmm(
+            x, p_, n_, bc=3, adc_bits=9, full_scale=448.0, noise=z,
+            use_pallas=False,
+        )
+    )
+    out_ref, us = timed(ref_fn, xb, gp, gn, nz)
+    out_k = cim_vmm(
+        xb, gp, gn, bc=3, adc_bits=9, full_scale=448.0, noise=nz,
+        use_pallas=True,
+    )
     err = float(jnp.max(jnp.abs(out_k - out_ref)))
-    emit("kernels.acim_vmm_ref", us, f"B=128 K=32 M=256 kernel_maxerr={err:.1e}")
-    assert err < 1e-2
+    emit("kernels.cim_vmm_ref", us, f"B=128 K=32 M=256 kernel_maxerr={err:.1e}")
+    assert err == 0.0, err
 
 
 if __name__ == "__main__":

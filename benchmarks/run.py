@@ -16,6 +16,7 @@ def main() -> None:
         table2_prior_work,
         kernels_bench,
         deploy_throughput,
+        cim_inference,
     )
 
     print("name,us_per_call,derived")
@@ -32,6 +33,7 @@ def main() -> None:
     retention_refresh.main()
     kernels_bench.main()
     deploy_throughput.main()
+    cim_inference.main()
     print(f"benchmarks.total,{(time.time() - t0) * 1e6:.0f},all-passed")
 
 

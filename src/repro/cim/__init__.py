@@ -1,0 +1,7 @@
+# Analog compute-in-memory serving: inference computed *in* the
+# programmed arrays (DESIGN.md Sec. 11) — macro tiling of live
+# ArrayState conductances, the noisy bit-serial DAC -> VMM -> ADC
+# forward, and the executor that swaps it into the serving engine.
+from .tile import CIMWeight, build_weight, slice_planes, tile_planes  # noqa: F401
+from .mvm import CIMConfig, cim_matmul, cim_vmm, planes_per_token  # noqa: F401
+from .executor import CIMExecutor, analog_eligible  # noqa: F401

@@ -1,0 +1,194 @@
+"""CIMExecutor: serve a `DeployedModel` straight off its live arrays.
+
+The executor closes the loop the materialize() serving path leaves
+open: instead of collapsing programmed conductances to dense digital
+weights, it re-views every matmul-consumed RRAM leaf as crossbar macro
+tiles (`tile.build_weight`) and hands the serving engine a parameter
+pytree whose deployed leaves are `CIMWeight` nodes — `models.layers.
+matmul` dispatches those through the noisy analog forward
+(`mvm.cim_matmul`); everything else (norms, embeddings, leaves consumed
+outside `matmul` such as MoE experts or cross-attention stacks) falls
+back to the digital materialize() path transparently.
+
+State-ownership: the `DeployedModel` still owns the conductances.  The
+executor only *views* them — when the lifetime subsystem ages or
+refreshes an array (``update_array`` swaps in a new `g`), the next
+`params()` call notices the new array object and re-tiles it, so served
+logits always read the live analog state.
+
+Accounting: every served token drives `planes_per_token` read phases
+through every analog macro, i.e. each physical verify column is read
+`planes` times per token.  The executor accumulates per-array read
+counts (`drain_reads` feeds them to `LifetimeSimulator` as real
+read-disturb traffic) and per-token latency/energy through the
+cost model's inference phase (`core.cost.inference_token_cost`).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.core.cost import inference_token_cost
+from repro.core.programmer import DeployedModel
+
+from .mvm import CIMConfig, cim_matmul, planes_per_token
+from .tile import CIMWeight, build_weight, rekey
+
+__all__ = ["CIMExecutor", "analog_eligible"]
+
+# Leaves consumed by `models.layers.matmul` under the scanned-stack
+# slicing convention.  Everything else deployed on RRAM (MoE experts,
+# cross-attention projections, multi-codebook heads) is served through
+# the digital materialize() fallback until it gets an analog mapping.
+_LAYER_MATMUL_KEYS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def analog_eligible(name: str, state) -> bool:
+    """Default policy: which deployed leaves run through analog tiles.
+
+    * stacked transformer projections ``['layers']['wq']`` etc. —
+      3-D (L, d, M) leaves sliced per layer by the decode/prefill scans;
+    * the 2-D LM head (untied embeddings).
+    """
+    if name == "['lm_head']":
+        return len(state.shape) == 2
+    return (
+        len(state.shape) == 3
+        and any(name == f"['layers']['{k}']" for k in _LAYER_MATMUL_KEYS)
+    )
+
+
+class CIMExecutor:
+    """Builds and maintains the analog parameter pytree for serving.
+
+    Args:
+      deployed: `deploy_arrays` output (owns the live conductances).
+      cfg: analog inference configuration.
+      key: master read-noise key; every engine access folds a fresh
+        sub-stream (`fold_in(key, access)`), every leaf folds its uid,
+        every stacked layer its index (tile.rekey).
+      predicate: overrides `analog_eligible`.
+    """
+
+    def __init__(
+        self,
+        deployed: DeployedModel,
+        cfg: CIMConfig | None = None,
+        key: jax.Array | None = None,
+        predicate: Callable[[str, Any], bool] | None = None,
+    ):
+        self.deployed = deployed
+        self.cfg = cfg or CIMConfig()
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.access = 0
+        self.tokens_served = 0
+        predicate = predicate or analog_eligible
+        self._analog: dict[str, CIMWeight] = {}
+        self._digital: dict[str, jax.Array] = {}
+        self._g_seen: dict[str, Any] = {}
+        self._uids = {
+            name: i for i, name in enumerate(sorted(deployed.arrays))
+        }
+        self._reads: dict[str, float] = {}
+        for name, state in deployed.arrays.items():
+            if predicate(name, state):
+                self._analog[name] = self._tile(name, state)
+                self._reads[name] = 0.0
+            else:
+                self._digital[name] = state.materialize()
+            self._g_seen[name] = state.g
+
+    # ----------------------------------------------------------- tiling
+    def _leaf_key(self, name: str) -> jax.Array:
+        k = jax.random.fold_in(self.key, self.access)
+        return jax.random.fold_in(k, self._uids[name])
+
+    def _tile(self, name: str, state) -> CIMWeight:
+        return build_weight(state, self.cfg, self._leaf_key(name), name=name)
+
+    def _refresh_views(self) -> None:
+        """Re-view any array whose conductances were swapped (drift/refresh)."""
+        for name, state in self.deployed.arrays.items():
+            if state.g is self._g_seen[name]:
+                continue
+            if name in self._analog:
+                self._analog[name] = self._tile(name, state)
+            else:
+                self._digital[name] = state.materialize()
+            self._g_seen[name] = state.g
+
+    # ---------------------------------------------------------- serving
+    def params(self) -> Any:
+        """Current served pytree: CIMWeight analog leaves + digital rest."""
+        self._refresh_views()
+        leaves = list(self.deployed.leaves)
+        rekey_live = self.cfg.sigma_read_lsb > 0.0  # keys unread when clean
+        for name in self.deployed.arrays:
+            slot = self.deployed.slots[name]
+            if name in self._analog:
+                w = self._analog[name]
+                leaves[slot] = (
+                    rekey(w, self._leaf_key(name)) if rekey_live else w
+                )
+            else:
+                leaves[slot] = self._digital[name]
+        return jax.tree_util.tree_unflatten(self.deployed.treedef, leaves)
+
+    def tick(self, n_tokens: int) -> Any:
+        """One engine access: fresh noise sub-streams + read accounting.
+
+        Every token reads every analog array's physical columns
+        `planes_per_token` times (each DAC plane is one read phase of
+        every macro the leaf spans).
+        """
+        self.access += 1
+        self.tokens_served += n_tokens
+        reads = float(n_tokens * self.planes)
+        for name in self._reads:
+            self._reads[name] += reads
+        return self.params()
+
+    # ------------------------------------------------- traffic / costs
+    @property
+    def planes(self) -> int:
+        return planes_per_token(self.cfg)
+
+    def drain_reads(self) -> dict[str, float]:
+        """Per-array column reads since the last drain (lifetime traffic)."""
+        out = dict(self._reads)
+        self._reads = {name: 0.0 for name in self._reads}
+        return out
+
+    def _conversion_counts(self) -> tuple[int, int]:
+        """(ADC conversions, DAC row drives) per token per plane."""
+        conv = drives = 0
+        for w in self._analog.values():
+            layers = w.stacked_layers
+            conv += layers * w.n_tiles * w.n_slices * w.n_outputs
+            drives += layers * w.n_tiles * w.tile_rows
+        return conv, drives
+
+    def token_cost(self) -> tuple[float, float]:
+        """(latency_ns, energy_pj) per served token, from the cost model."""
+        conv, drives = self._conversion_counts()
+        return inference_token_cost(
+            n_conversions=conv,
+            n_row_drives=drives,
+            planes=self.planes,
+            adc=self.deployed.wv_cfg.adc,
+            cost=self.deployed.cost,
+        )
+
+    def summary(self) -> dict[str, float]:
+        lat, en = self.token_cost()
+        return dict(
+            analog_leaves=len(self._analog),
+            digital_fallback_leaves=len(self._digital),
+            planes_per_token=self.planes,
+            tokens_served=self.tokens_served,
+            token_latency_ns=lat,
+            token_energy_pj=en,
+            total_energy_pj=en * self.tokens_served,
+        )

@@ -1,0 +1,195 @@
+"""Noisy analog matrix-vector multiply through programmed macro tiles.
+
+The inference datapath of the paper's CBA macro (Fig. 2 / 6(b)), end to
+end in cell-LSB units:
+
+1. **Input DAC, bit-serial.**  Activations are scaled per token to a
+   signed `dac_bits` code and streamed as binary row-drive planes —
+   one plane per magnitude bit and polarity (positive and negative
+   magnitudes drive separate phases; their ADC results subtract
+   digitally).  ``dac_bits=None`` models an ideal analog driver: the
+   raw activation drives the rows in a single plane.
+2. **Analog column sums + per-slice ADC.**  Every plane multiplies into
+   each tile's signed conductance pair per slice; per-read TIA/ADC
+   thermal noise lands on the analog partial sum; the shared `cim_vmm`
+   entry (`kernels/acim_vmm`, `use_pallas`-gated with a bit-identical
+   unfused reference) applies the fused clamp+quantize ADC epilogue and
+   the 2^(Bc*l) shift-and-add slice recombination.
+3. **Digital recombination.**  Plane outputs recombine with their
+   bit weights and the per-token DAC scale, tiles sum over the row
+   partition, and the per-output-channel quantization scale dequantizes
+   to model units.
+
+Read-noise RNG policy (DESIGN.md Sec. 11): every read draws from
+
+    fold_in(leaf_key, tile) -> fold_in(., plane) -> fold_in(., token)
+
+where `leaf_key` is the executor's per-access key (re-folded every
+engine step) and `token` is the flattened batch index of the call.  A
+token's noise therefore depends only on (access key, tile, plane,
+token index) — NOT on how many other tokens share the batch — so a
+batched forward is bit-reproducible across batch shapes.
+
+In the ideal limit (``dac_bits=None``, ``adc_bits=None``,
+``sigma_read_lsb=0``) the whole pipeline collapses algebraically to
+``x @ materialize(w)`` computed in f32 (reassociation-level error only)
+— the materialize-vs-analog equivalence contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+from repro.kernels.acim_vmm import ops as vmm_ops
+
+from .tile import CIMWeight
+
+__all__ = ["CIMConfig", "cim_vmm", "cim_matmul", "planes_per_token"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    """Analog inference configuration (static under jit).
+
+    `None` for dac_bits/adc_bits selects the ideal converter on that
+    side — the knobs the equivalence contract turns to infinity.
+    """
+
+    macro_rows: int = 128            # max rows per crossbar macro tile
+    dac_bits: int | None = 6         # input DAC resolution; None = ideal analog
+    adc_bits: int | None = 10        # per-slice column ADC; None = ideal
+    full_scale_frac: float = 1.0     # ADC range as fraction of +-R*(2^Bc-1)
+    sigma_read_lsb: float = 0.0      # per-read TIA/ADC noise std (cell-LSB)
+    use_pallas: bool = False         # fused Pallas kernel (interpret off-TPU)
+
+    def __post_init__(self):
+        # dac_bits counts sign + magnitude: >= 2 leaves >= 1 magnitude
+        # bit; 1 would stream zero planes.
+        assert self.dac_bits is None or self.dac_bits >= 2, self.dac_bits
+        assert self.adc_bits is None or self.adc_bits >= 1, self.adc_bits
+        assert self.macro_rows >= 1, self.macro_rows
+
+    def replace(self, **kw) -> "CIMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def planes_per_token(cfg: CIMConfig) -> int:
+    """Row-drive planes (= reads of every physical column) per token."""
+    if cfg.dac_bits is None:
+        return 1
+    return 2 * (cfg.dac_bits - 1)  # magnitude bits x {pos, neg} phases
+
+
+def cim_vmm(
+    x: jax.Array,
+    g_pos: jax.Array,
+    g_neg: jax.Array,
+    *,
+    bc: int,
+    adc_bits: int | None,
+    full_scale: float,
+    noise: jax.Array | None = None,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """One macro-tile readout: the shared serving/benchmark entry point.
+
+    (B, R) row drives x (S, R, M) signed slice pairs -> (B, M) f32, with
+    pre-ADC `noise` (S, B, M) and the fused ADC epilogue.  Dispatches to
+    the Pallas kernel (interpret mode off-TPU) or the bit-identical
+    unfused reference.
+    """
+    return vmm_ops.acim_vmm(
+        x, g_pos, g_neg, bc=bc, adc_bits=adc_bits, full_scale=full_scale,
+        noise=noise, use_pallas=use_pallas,
+    )
+
+
+def _dac_stream(xf: jax.Array, cfg: CIMConfig) -> tuple[jax.Array, jax.Array]:
+    """(T, K) f32 activations -> (P, T, K) row-drive planes, (P, T) weights.
+
+    Ideal driver: one plane, unit weight.  Bit-serial: per-token absmax
+    scaling to a signed `dac_bits` code, positive and negative magnitudes
+    split into binary planes LSB-first; plane p recombines with weight
+    +-2^bit * token_scale.
+    """
+    if cfg.dac_bits is None:
+        return xf[None], jnp.ones((1, xf.shape[0]), jnp.float32)
+    n_mag = cfg.dac_bits - 1
+    q_max = float((1 << n_mag) - 1)
+    s_tok = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / q_max
+    s_tok = jnp.maximum(s_tok, 1e-12)
+    q = jnp.clip(jnp.round(xf / s_tok), -q_max, q_max).astype(jnp.int32)
+    pos, neg = jnp.maximum(q, 0), jnp.maximum(-q, 0)
+    planes, weights = [], []
+    for sign, mag in ((1.0, pos), (-1.0, neg)):
+        for b in range(n_mag):
+            planes.append(((mag >> b) & 1).astype(jnp.float32))
+            weights.append(sign * float(1 << b) * s_tok[:, 0])
+    return jnp.stack(planes), jnp.stack(weights)
+
+
+def _read_noise(
+    key: jax.Array, n_tokens: int, n_slices: int, m: int, cfg: CIMConfig
+) -> jax.Array | None:
+    """Per-read noise for one (tile, plane): (S, T, M), or None if clean.
+
+    Token sub-streams fold the flattened batch index, so token i's draw
+    is independent of the batch size it rides in.
+    """
+    if cfg.sigma_read_lsb <= 0.0:
+        return None
+    tok_keys = rng.fold_col_keys(key, jnp.arange(n_tokens, dtype=jnp.int32))
+    nz = rng.normal(tok_keys, (n_tokens, n_slices, m))
+    return cfg.sigma_read_lsb * jnp.transpose(nz, (1, 0, 2))
+
+
+def cim_matmul(x: jax.Array, w: CIMWeight) -> jax.Array:
+    """Analog forward for one weight leaf: x (..., K) -> (..., M).
+
+    Drop-in for `models.layers.matmul` (f32 accumulation, result cast to
+    x.dtype) computing through the live conductance tiles instead of a
+    materialized dense weight.
+    """
+    cfg: CIMConfig = w.cfg
+    assert w.g_pos.ndim == 4, (
+        "stacked CIMWeight must be layer-sliced before matmul"
+    )
+    lead, k = x.shape[:-1], x.shape[-1]
+    assert k == w.rows_in, (k, w.rows_in, w.name)
+    xf = x.reshape(-1, k).astype(jnp.float32)
+    t = xf.shape[0]
+
+    planes, weights = _dac_stream(xf, cfg)        # (P, T, K), (P, T)
+    p = planes.shape[0]
+    n_tiles, s, r, m = w.g_pos.shape
+    pad = n_tiles * r - k
+    if pad:
+        planes = jnp.pad(planes, ((0, 0), (0, 0), (0, pad)))
+    xp = planes.reshape(p * t, n_tiles * r)
+    full_scale = cfg.full_scale_frac * 2.0 * r * float(w.levels - 1)
+
+    acc = jnp.zeros((p * t, m), jnp.float32)
+    for ti in range(n_tiles):
+        noise = None
+        if cfg.sigma_read_lsb > 0.0:
+            k_tile = rng.fold_in(w.key, ti)
+            noise = jnp.concatenate(
+                [
+                    _read_noise(rng.fold_in(k_tile, pi), t, s, m, cfg)
+                    for pi in range(p)
+                ],
+                axis=1,
+            )  # (S, P*T, M)
+        acc = acc + cim_vmm(
+            xp[:, ti * r : (ti + 1) * r], w.g_pos[ti], w.g_neg[ti],
+            bc=w.bc, adc_bits=cfg.adc_bits, full_scale=full_scale,
+            noise=noise, use_pallas=cfg.use_pallas,
+        )
+
+    y = jnp.einsum("pt,ptm->tm", weights, acc.reshape(p, t, m))
+    y = y * w.scale[None, :]
+    return y.reshape(*lead, m).astype(x.dtype)

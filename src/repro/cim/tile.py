@@ -1,0 +1,213 @@
+"""Crossbar macro tiling: packed WV columns -> inference operand planes.
+
+The WV engine programs *verify columns* — (C, N) rows of N cells sharing
+one TIA/ADC (quant/pack layout).  Inference reads the same physical
+cells along the orthogonal axis: a vector-matrix multiply drives the
+array's K input rows and senses all signed column pairs in parallel.
+This module re-views the programmed `ArrayState` conductances in the
+inference layout without copying semantics:
+
+    packed columns (C, N)
+      -> per-slice signed planes  g_pos/g_neg : (S, K, M)   (slice_planes)
+      -> macro tiles of <= `macro_rows` rows : (T, S, R, M) (tile_planes)
+
+Pack padding rows (K..K_padded) are dropped exactly as `materialize()`
+drops them; tile padding rows are zero conductance AND driven with zero
+input, so they contribute nothing to any partial sum.
+
+For stacked per-layer leaves (L, d, M) — the transformer's scanned layer
+stacks — every tiled array carries a leading L axis on every *child*
+array (tiles, scale, noise key), so the model's existing parameter
+plumbing (``tree.map(lambda a: a[idx], layers)``, `lax.scan` over
+stacked params) slices a `CIMWeight` exactly like it slices a dense
+leaf.  That is what lets the analog forward drop into `models.layers`
+without touching the scan bodies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+from repro.quant.pack import PackedLayout
+
+__all__ = ["CIMWeight", "slice_planes", "tile_planes", "build_weight", "rekey"]
+
+
+@dataclasses.dataclass
+class CIMWeight:
+    """One weight leaf living on crossbar macro tiles (a pytree node).
+
+    Children (sliced together by scan/tree.map — all lead with L for
+    stacked leaves):
+      g_pos/g_neg : ([L,] T, S, R, M) per-tile signed conductance planes
+      scale       : ([L,] M) per-output-channel dequantization scale
+      key         : ([L,] 2) per-access read-noise key (executor re-folds
+                    it every access; see mvm.py RNG policy)
+    Static aux:
+      rows_in : real input rows per layer (pre tile padding)
+      bc      : bits per cell (slice recombination weight base)
+      levels  : cell levels (ADC full-scale in LSB units)
+      cfg     : CIMConfig (opaque here; consumed by mvm.cim_matmul)
+      name    : leaf name (diagnostics)
+    """
+
+    g_pos: jax.Array
+    g_neg: jax.Array
+    scale: jax.Array
+    key: jax.Array
+    rows_in: int
+    bc: int
+    levels: int
+    cfg: Any
+    name: str = ""
+
+    @property
+    def n_tiles(self) -> int:
+        return self.g_pos.shape[-4]
+
+    @property
+    def n_slices(self) -> int:
+        return self.g_pos.shape[-3]
+
+    @property
+    def tile_rows(self) -> int:
+        return self.g_pos.shape[-2]
+
+    @property
+    def n_outputs(self) -> int:
+        return self.g_pos.shape[-1]
+
+    @property
+    def stacked_layers(self) -> int:
+        """Leading per-layer stack size (1 for a plain 2-D leaf)."""
+        return self.g_pos.shape[0] if self.g_pos.ndim == 5 else 1
+
+
+def _flatten(w: CIMWeight):
+    return (
+        (w.g_pos, w.g_neg, w.scale, w.key),
+        (w.rows_in, w.bc, w.levels, w.cfg, w.name),
+    )
+
+
+def _unflatten(aux, children) -> CIMWeight:
+    return CIMWeight(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(CIMWeight, _flatten, _unflatten)
+
+
+def slice_planes(
+    columns: jax.Array, layout: PackedLayout
+) -> tuple[jax.Array, jax.Array]:
+    """Packed verify columns (C, N) -> signed slice planes (S, K, M).
+
+    The exact inverse view of `quant.pack.pack_columns` with polarity and
+    slice axes kept separate (where `unpack_columns` recombines them):
+    programming error on any cell lands on the same (slice, row, output)
+    coordinate the inference VMM reads.  Pack padding rows are dropped.
+    """
+    kp, n = layout.k_padded, layout.n_cells
+    cells = columns.reshape(kp // n, layout.m_out, 2, layout.slices, n)
+    cells = jnp.moveaxis(cells, -1, 1).reshape(kp, layout.m_out, 2, layout.slices)
+    planes = jnp.transpose(cells, (3, 0, 1, 2))  # (S, Kp, M, 2)
+    planes = planes[:, : layout.k_in]
+    return planes[..., 0], planes[..., 1]
+
+
+def tile_planes(
+    g_pos: jax.Array,
+    g_neg: jax.Array,
+    macro_rows: int,
+    n_layers: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Row-partition slice planes (S, K, M) into <=`macro_rows` macro tiles.
+
+    Returns ([L,] T, S, R, M) pairs.  With `n_layers` the K axis is first
+    split into L per-layer row groups of d = K/L rows (the scanned-stack
+    convention: layer idx owns rows [idx*d, (idx+1)*d)), each tiled
+    independently so a sliced layer is a self-contained macro set.
+    """
+    s, k, m = g_pos.shape
+
+    def _tile(gp, gn, rows):
+        r = min(macro_rows, rows)
+        n_t = -(-rows // r)
+        pad = n_t * r - rows
+        if pad:
+            gp = jnp.pad(gp, ((0, 0), (0, pad), (0, 0)))
+            gn = jnp.pad(gn, ((0, 0), (0, pad), (0, 0)))
+        gp = gp.reshape(s, n_t, r, m)
+        gn = gn.reshape(s, n_t, r, m)
+        return jnp.moveaxis(gp, 1, 0), jnp.moveaxis(gn, 1, 0)  # (T, S, R, M)
+
+    if n_layers is None:
+        return _tile(g_pos, g_neg, k)
+    assert k % n_layers == 0, (k, n_layers)
+    d = k // n_layers
+    r = min(macro_rows, d)
+    n_t = -(-d // r)
+    pad = n_t * r - d
+
+    def _tile_stacked(g):
+        g = g.reshape(s, n_layers, d, m)
+        if pad:
+            g = jnp.pad(g, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        g = g.reshape(s, n_layers, n_t, r, m)
+        return jnp.transpose(g, (1, 2, 0, 3, 4))  # (L, T, S, R, M)
+
+    return _tile_stacked(g_pos), _tile_stacked(g_neg)
+
+
+def build_weight(
+    state,            # core.programmer.ArrayState (duck-typed: no import cycle)
+    cfg: Any,
+    key: jax.Array,
+    name: str = "",
+) -> CIMWeight:
+    """Re-view one programmed `ArrayState` as inference macro tiles.
+
+    3-D leaves (L, d, M) — scanned layer stacks — get a leading L axis on
+    every child (per-layer tiles, broadcast scale, per-layer noise keys
+    ``fold_in(key, layer)``); other shapes tile the flattened (K, M) view
+    directly.  The tiles alias the live `g`: rebuilding after lifetime
+    drift re-views the aged conductances.
+    """
+    layout: PackedLayout = state.layout
+    g_pos, g_neg = slice_planes(state.g, layout)
+    stacked = len(state.shape) == 3
+    if stacked:
+        n_layers = int(state.shape[0])
+        g_pos, g_neg = tile_planes(g_pos, g_neg, cfg.macro_rows, n_layers)
+        scale = jnp.broadcast_to(
+            state.scale.reshape(1, -1).astype(jnp.float32),
+            (n_layers, layout.m_out),
+        )
+        keys = rng.fold_col_keys(key, jnp.arange(n_layers, dtype=jnp.int32))
+        rows_in = int(state.shape[1])
+    else:
+        g_pos, g_neg = tile_planes(g_pos, g_neg, cfg.macro_rows)
+        scale = state.scale.reshape(-1).astype(jnp.float32)
+        keys = key
+        rows_in = layout.k_in
+    return CIMWeight(
+        g_pos=g_pos, g_neg=g_neg, scale=scale, key=keys,
+        rows_in=rows_in, bc=layout.bc, levels=1 << layout.bc, cfg=cfg,
+        name=name,
+    )
+
+
+def rekey(w: CIMWeight, key: jax.Array) -> CIMWeight:
+    """Swap the read-noise key (per-access re-fold; cheap, host-side)."""
+    if w.g_pos.ndim == 5:  # stacked: one sub-stream per layer
+        keys = rng.fold_col_keys(
+            key, jnp.arange(w.g_pos.shape[0], dtype=jnp.int32)
+        )
+    else:
+        keys = key
+    return dataclasses.replace(w, key=keys)

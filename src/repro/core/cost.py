@@ -32,7 +32,13 @@ import jax.numpy as jnp
 
 from .types import ADCConfig, DeviceConfig, WVConfig, WVMethod
 
-__all__ = ["CircuitCost", "read_phase_cost", "write_phase_cost", "decode_cost"]
+__all__ = [
+    "CircuitCost",
+    "read_phase_cost",
+    "write_phase_cost",
+    "decode_cost",
+    "inference_token_cost",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +53,11 @@ class CircuitCost:
     e_adder_hdpv_pj: float = 0.9   # multi-bit accumulate (0.8-1.0 pJ)
     e_adder_harp_pj: float = 0.2   # ternary accumulate
     g_lsb_us: float = 13.0 / 7.0   # conductance per LSB (G_max / (2^Bc - 1))
+    # Inference phase (analog serving, DESIGN.md Sec. 11): bit-serial
+    # input DAC row drivers — 1-bit pulse drivers, far cheaper than the
+    # column ADCs they feed.
+    t_dac_ns: float = 2.0          # row-driver settle per bit plane
+    e_dac_pj: float = 0.05         # per driven row per plane
 
 
 def read_phase_cost(
@@ -126,6 +137,39 @@ def write_phase_cost(
     e_per_pulse_pj = (v * v) * g_us * cost.t_write_pulse_ns * 1e-3
     e = jnp.sum(n_pulses * e_per_pulse_pj, axis=column_axis)
     return lat, e
+
+
+def inference_token_cost(
+    n_conversions: int,
+    n_row_drives: int,
+    planes: int,
+    adc: ADCConfig,
+    cost: CircuitCost,
+) -> tuple[float, float]:
+    """(latency_ns, energy_pj) of serving ONE token through the arrays.
+
+    The inference phase of the cost model (DESIGN.md Sec. 11): each of
+    the `planes` bit-serial DAC phases drives every macro's rows and
+    full-SAR-converts every sensed signed column pair (slices and tiles
+    have their own converters, so a phase's latency is one
+    drive+read+convert regardless of model size; phases are sequential).
+    The shift-and-add recombination streams behind the reads (Sec. 3.2
+    decode streaming) — one tail add on the critical path, accumulate
+    energy per conversion.
+
+    Args:
+      n_conversions: ADC conversions per plane (sum over analog leaves
+        of layers * tiles * slices * outputs).
+      n_row_drives: DAC row drives per plane (layers * tiles * rows).
+      planes: bit-serial phases per token (`cim.planes_per_token`).
+    """
+    lat = planes * (cost.t_dac_ns + adc.t_read_pulse_ns + adc.t_sar_ns)
+    lat += cost.t_adder_ns
+    e_plane = (
+        n_row_drives * cost.e_dac_pj
+        + n_conversions * (adc.e_tia_pj + adc.e_sar_pj + cost.e_adder_hdpv_pj)
+    )
+    return float(lat), float(planes * e_plane)
 
 
 def decode_cost(cfg: WVConfig, cost: CircuitCost) -> tuple[float, float]:

@@ -12,6 +12,16 @@ Grid: (M/block_m, B/block_b); the slice loop (k = B/Bc, typically 2) is
 unrolled inside the kernel, accumulating the shifted slices in VMEM.
 The contraction dim K is kept whole per block (RRAM macro columns are
 short: K = N <= 128 rows).
+
+Inference extensions (the analog serving path, DESIGN.md Sec. 11):
+
+* an optional per-read noise operand (S, B, M) — sampled outside under
+  the fold_in RNG policy — is added to every slice's analog partial sum
+  *before* the ADC epilogue, exactly where TIA/ADC thermal noise enters
+  the macro;
+* ``adc_bits=None`` models an ideal (infinite-resolution) converter:
+  the epilogue reduces to the identity, which is what makes the analog
+  forward provably collapse to the digitally materialized matmul.
 """
 
 from __future__ import annotations
@@ -23,16 +33,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _acim_kernel(x_ref, gp_ref, gn_ref, o_ref, *, bc, adc_bits, full_scale):
+def _acim_kernel(*refs, bc, adc_bits, full_scale, with_noise):
+    if with_noise:
+        x_ref, gp_ref, gn_ref, nz_ref, o_ref = refs
+    else:
+        x_ref, gp_ref, gn_ref, o_ref = refs
+        nz_ref = None
     x = x_ref[...]
     s = gp_ref.shape[0]
     acc = jnp.zeros((x.shape[0], gp_ref.shape[2]), jnp.float32)
-    w = full_scale / float(1 << adc_bits)
-    lo = -full_scale / 2.0
+    if adc_bits is not None:
+        w = full_scale / float(1 << adc_bits)
+        lo = -full_scale / 2.0
     for l in range(s):  # static unroll over bit slices
         part = jnp.dot(
             x, gp_ref[l] - gn_ref[l], preferred_element_type=jnp.float32
         )
+        if nz_ref is not None:
+            part = part + nz_ref[l]
+        if adc_bits is None:
+            acc = acc + part * float(1 << (bc * l))
+            continue
         # fused ADC epilogue: clamp to full scale, quantize to code grid
         code = jnp.clip(
             jnp.round((jnp.clip(part, lo, -lo) - lo) / w), 0.0, float((1 << adc_bits) - 1)
@@ -49,9 +70,10 @@ def acim_vmm_pallas(
     x: jax.Array,
     g_pos: jax.Array,
     g_neg: jax.Array,
+    noise: jax.Array | None = None,
     *,
     bc: int,
-    adc_bits: int,
+    adc_bits: int | None,
     full_scale: float,
     block_b: int = 128,
     block_m: int = 128,
@@ -60,28 +82,45 @@ def acim_vmm_pallas(
     b, k = x.shape
     s, k2, m = g_pos.shape
     assert k == k2 and g_neg.shape == g_pos.shape
+    if noise is not None:
+        assert noise.shape == (s, b, m), (noise.shape, (s, b, m))
     block_b = min(block_b, b)
     block_m = min(block_m, m)
     pad_b, pad_m = (-b) % block_b, (-m) % block_m
     if pad_b:
         x = jnp.pad(x, ((0, pad_b), (0, 0)))
+        if noise is not None:
+            noise = jnp.pad(noise, ((0, 0), (0, pad_b), (0, 0)))
     if pad_m:
         g_pos = jnp.pad(g_pos, ((0, 0), (0, 0), (0, pad_m)))
         g_neg = jnp.pad(g_neg, ((0, 0), (0, 0), (0, pad_m)))
+        if noise is not None:
+            noise = jnp.pad(noise, ((0, 0), (0, 0), (0, pad_m)))
     bb, mm = x.shape[0], g_pos.shape[2]
+
+    in_specs = [
+        pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((s, k, block_m), lambda i, j: (0, 0, j)),
+        pl.BlockSpec((s, k, block_m), lambda i, j: (0, 0, j)),
+    ]
+    operands = [
+        x.astype(jnp.float32),
+        g_pos.astype(jnp.float32),
+        g_neg.astype(jnp.float32),
+    ]
+    if noise is not None:
+        in_specs.append(pl.BlockSpec((s, block_b, block_m), lambda i, j: (0, i, j)))
+        operands.append(noise.astype(jnp.float32))
 
     out = pl.pallas_call(
         functools.partial(
-            _acim_kernel, bc=bc, adc_bits=adc_bits, full_scale=full_scale
+            _acim_kernel, bc=bc, adc_bits=adc_bits, full_scale=full_scale,
+            with_noise=noise is not None,
         ),
         grid=(bb // block_b, mm // block_m),
-        in_specs=[
-            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((s, k, block_m), lambda i, j: (0, 0, j)),
-            pl.BlockSpec((s, k, block_m), lambda i, j: (0, 0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_m), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bb, mm), jnp.float32),
         interpret=interpret,
-    )(x.astype(jnp.float32), g_pos.astype(jnp.float32), g_neg.astype(jnp.float32))
+    )(*operands)
     return out[:b, :m]

@@ -9,14 +9,19 @@ from .acim_vmm import acim_vmm_pallas
 
 
 def acim_vmm(
-    x, g_pos, g_neg, *, bc: int, adc_bits: int, full_scale: float,
-    use_pallas: bool = True,
+    x, g_pos, g_neg, *, bc: int, adc_bits: int | None, full_scale: float,
+    noise=None, use_pallas: bool = True,
 ):
-    """Bit-sliced signed ACiM VMM with per-slice ADC quantization."""
+    """Bit-sliced signed ACiM VMM with per-slice ADC quantization.
+
+    `noise` (S, B, M) is added to each slice's analog partial sums
+    before conversion; `adc_bits=None` bypasses the ADC (ideal
+    converter).  The Pallas and reference paths are bit-identical.
+    """
     if not use_pallas:
-        return ref.acim_vmm(x, g_pos, g_neg, bc, adc_bits, full_scale)
+        return ref.acim_vmm(x, g_pos, g_neg, bc, adc_bits, full_scale, noise)
     on_tpu = jax.default_backend() == "tpu"
     return acim_vmm_pallas(
-        x, g_pos, g_neg, bc=bc, adc_bits=adc_bits, full_scale=full_scale,
+        x, g_pos, g_neg, noise, bc=bc, adc_bits=adc_bits, full_scale=full_scale,
         interpret=not on_tpu,
     )

@@ -5,10 +5,14 @@ weight matrix stored as k = B/Bc conductance slices on signed column
 pairs, with per-column ADC quantization of every slice's partial sums
 and digital shift-and-add recombination:
 
-    y = sum_l 2^(Bc*(l-1)) * ADC( x @ (G+_l - G-_l) )
+    y = sum_l 2^(Bc*(l-1)) * ADC( x @ (G+_l - G-_l) + n_l )
 
 The ADC clamps each slice's analog partial sums to its full-scale range
 (n-bit over [-FS/2, FS/2]) — the same converter the verify path uses.
+`noise` (S, B, M) models per-read TIA/ADC thermal noise entering the
+analog partial sum before conversion; `adc_bits=None` is an ideal
+converter (identity), the limit in which the analog forward equals the
+digital matmul exactly.
 """
 
 from __future__ import annotations
@@ -30,14 +34,18 @@ def acim_vmm(
     g_pos: jax.Array,        # (S, K, M) positive-column conductance levels
     g_neg: jax.Array,        # (S, K, M) negative-column conductance levels
     bc: int,                 # bits per cell
-    adc_bits: int,
+    adc_bits: int | None,
     full_scale: float,
+    noise: jax.Array | None = None,  # (S, B, M) pre-ADC read noise
 ) -> jax.Array:
     """Bit-sliced signed VMM with per-slice ADC quantization: (B, M)."""
     s = g_pos.shape[0]
     acc = jnp.zeros((x.shape[0], g_pos.shape[2]), jnp.float32)
     for l in range(s):
         part = x.astype(jnp.float32) @ (g_pos[l] - g_neg[l]).astype(jnp.float32)
-        part = adc_quantize(part, adc_bits, full_scale)
+        if noise is not None:
+            part = part + noise[l].astype(jnp.float32)
+        if adc_bits is not None:
+            part = adc_quantize(part, adc_bits, full_scale)
         acc = acc + part * float(1 << (bc * l))
     return acc

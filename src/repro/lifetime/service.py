@@ -95,7 +95,13 @@ class LifetimeSimulator:
       drift_cfg / refresh_cfg: dynamics and scrub policy.
       on_refresh: optional hook called with freshly materialized params
         after every epoch whose refresh re-programmed at least one
-        column (e.g. ``engine.swap_params``).
+        column (e.g. ``engine.swap_params``).  Analog serving
+        (`CIMExecutor`) needs no hook — it re-views the live arrays.
+      traffic_fn: optional source of REAL per-array read counts for the
+        epoch — e.g. ``CIMExecutor.drain_reads``, which counts every
+        column read the analog serving path actually issued.  Each
+        epoch's per-leaf reads are ``traffic_fn()[name]`` (plus the
+        abstract `reads_per_column` scalar, for synthetic extra load).
     """
 
     def __init__(
@@ -105,12 +111,14 @@ class LifetimeSimulator:
         drift_cfg: DriftConfig | None = None,
         refresh_cfg: RefreshConfig | None = None,
         on_refresh: Callable[[Any], None] | None = None,
+        traffic_fn: Callable[[], dict[str, float]] | None = None,
     ):
         self.key = key
         self.deployed = deployed
         self.drift_cfg = drift_cfg or DriftConfig()
         self.refresh_cfg = refresh_cfg or RefreshConfig()
         self.on_refresh = on_refresh
+        self.traffic_fn = traffic_fn
         self.t_s = 0.0
         self.epoch = 0
         k = key
@@ -143,19 +151,23 @@ class LifetimeSimulator:
     def step_epoch(
         self,
         dt_s: float,
-        reads_per_column: float,
+        reads_per_column: float = 0.0,
         eval_fn: Callable[[Any], float] | None = None,
     ) -> EpochRecord:
         """Age by `dt_s`, refresh, re-materialize, evaluate."""
         wv_cfg, cost = self.deployed.wv_cfg, self.deployed.cost
         flagged = reprogrammed = 0
         en_v = en_p = lat = pulses = 0.0
+        traffic = self.traffic_fn() if self.traffic_fn is not None else {}
+        applied_reads = []
         for li, (name, st) in enumerate(sorted(self.states.items())):
             k_adv, k_ref = jax.random.split(
                 jax.random.fold_in(jax.random.fold_in(self.key, self.epoch), li)
             )
+            leaf_reads = float(reads_per_column) + float(traffic.get(name, 0.0))
+            applied_reads.append(leaf_reads)
             st = advance(
-                k_adv, st, dt_s, reads_per_column, wv_cfg.device, self.drift_cfg
+                k_adv, st, dt_s, leaf_reads, wv_cfg.device, self.drift_cfg
             )
             st, out = apply_refresh(
                 k_ref, st, self.deployed.arrays[name].targets, wv_cfg, cost,
@@ -185,7 +197,10 @@ class LifetimeSimulator:
         return EpochRecord(
             epoch=self.epoch - 1,
             t_s=self.t_s,
-            reads_per_column=float(reads_per_column),
+            reads_per_column=(
+                sum(applied_reads) / len(applied_reads)
+                if applied_reads else float(reads_per_column)
+            ),
             rms_drift_lsb=self._rms_drift_lsb(),
             stuck_frac=self._stuck_frac(),
             columns_flagged=flagged,

@@ -12,6 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cim.mvm import cim_matmul
+from repro.cim.tile import CIMWeight
+
 
 def truncated_normal(key, shape, std, dtype):
     return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
@@ -23,7 +26,15 @@ def dense_init(key, d_in, d_out, dtype, std=None):
 
 
 def matmul(x, w):
-    """bf16 x bf16 -> f32 accumulate -> bf16 (TPU MXU policy)."""
+    """bf16 x bf16 -> f32 accumulate -> bf16 (TPU MXU policy).
+
+    A `CIMWeight` leaf (analog serving, `repro.cim`) routes through the
+    in-array forward instead: the weight never exists digitally — the
+    programmed conductance tiles compute the product, noise and ADC
+    included.  Same contract (f32 accumulate, cast back to x.dtype).
+    """
+    if isinstance(w, CIMWeight):
+        return cim_matmul(x, w)
     y = jnp.einsum("...k,kn->...n", x, w, preferred_element_type=jnp.float32)
     return y.astype(x.dtype)
 

@@ -43,15 +43,31 @@ def make_decode_step(cfg: ModelConfig, mesh=None, sample: bool = False):
 @dataclasses.dataclass
 class ServeEngine:
     cfg: ModelConfig
-    params: Any
+    params: Any = None
     mesh: Any = None
     temperature: float = 0.0
+    # Analog serving (repro.cim.CIMExecutor): when set, every prefill /
+    # decode access pulls fresh params from the executor — deployed
+    # matmul leaves arrive as CIMWeight tiles (computed in-array by
+    # models.layers.matmul), read-noise keys advance per access, and the
+    # executor accounts per-array read-disturb traffic and token costs.
+    # Only the tiny noise-key leaves change between accesses, so the
+    # jitted step functions never retrace.
+    executor: Any = None
 
     def __post_init__(self):
+        if self.executor is not None and self.params is None:
+            self.params = self.executor.params()
         self._prefill = jax.jit(make_prefill_step(self.cfg, self.mesh))
         self._decode = jax.jit(
             make_decode_step(self.cfg, self.mesh, sample=self.temperature > 0)
         )
+
+    def _access_params(self, n_tokens: int) -> Any:
+        """Params for one engine access of `n_tokens` batch tokens."""
+        if self.executor is not None:
+            self.params = self.executor.tick(n_tokens)
+        return self.params
 
     def swap_params(self, params: Any) -> None:
         """Hot-swap served weights (e.g. after an RRAM refresh).
@@ -70,13 +86,15 @@ class ServeEngine:
         """tokens: (B, S) prompt; returns (B, max_new) generated ids."""
         b, s = tokens.shape
         key = key if key is not None else jax.random.PRNGKey(0)
-        last, cache = self._prefill(self.params, {"tokens": tokens})
+        last, cache = self._prefill(self._access_params(b * s), {"tokens": tokens})
         cur = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
         outs = [cur]
         done = jnp.zeros((b,), bool)
         for i in range(max_new - 1):
             key, sub = jax.random.split(key)
-            tok, _, cache = self._decode(self.params, cache, {"tokens": cur}, sub)
+            tok, _, cache = self._decode(
+                self._access_params(b), cache, {"tokens": cur}, sub
+            )
             cur = tok[:, None]
             if eos_id is not None:
                 done = done | (tok == eos_id)
