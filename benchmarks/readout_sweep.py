@@ -1,0 +1,143 @@
+"""Readout-variant sweep: per-column ADC reference drift x calibration.
+
+The first scenario the unified readout subsystem (DESIGN.md Sec. 12)
+unlocks as *config, not code*: every column's converter carries a static
+reference offset (sigma_col_offset_lsb, a la ADC reference tuning —
+arXiv:2502.05948), and programming runs under three read-path variants:
+
+  clean       — no offset drift (the paper's baseline read path)
+  drifted     — offsets sampled once per column, uncalibrated
+  calibrated  — same offsets, trimmed from K reference reads
+                (`readout.calibrate.calibrate_offsets`) before WV
+
+One-hot readouts (CW-SC, MRA) eat a static offset as a systematic
+per-cell programming error, so drift poisons them and reference tuning
+rescues them.  Hadamard readouts cancel any measurement-constant offset
+on the N-1 balanced rows at decode — the same structural immunity as
+for common-mode noise — so they barely move with or without
+calibration.  Calibration itself is priced through the shared cost
+model (K full-SAR sweeps per column, `readout.cost.sweep_cost`).
+
+Emits ``name,us_per_call,derived`` CSV rows and BENCH_readout.json
+(BENCH_readout_quick.json for the CI smoke run, which must not clobber
+the committed full-mode trajectory).
+
+Asserts (ISSUE 4 satellite):
+* drift degrades one-hot programming by > 2x RMS;
+* calibration recovers one-hot RMS to < 1.4x clean;
+* Hadamard methods degrade < half as much as one-hot under the same
+  drift, with no calibration at all.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CircuitCost, NoiseConfig, WVMethod, default_config_for_array
+from repro.core.wv import program_columns
+from repro.readout import (
+    Converter,
+    ReadoutBasis,
+    calibrate_offsets,
+    for_wv_method,
+    sample_col_offsets,
+    sweep_cost,
+)
+
+from .common import emit, timed
+
+_SIGMA_READ = 0.7      # severe verify-read noise (paper Fig. 10 regime)
+_SIGMA_OFFSET = 1.5    # static per-column reference drift, cell-LSB
+_K_CAL = 8             # calibration reads per column
+
+
+def main(quick: bool = False) -> dict:
+    if quick:
+        methods = [WVMethod.MRA, WVMethod.HARP]
+        n_columns = 96
+    else:
+        methods = [WVMethod.CW_SC, WVMethod.MRA, WVMethod.HD_PV, WVMethod.HARP]
+        n_columns = 384
+
+    rows: dict[str, float] = {}
+    rms: dict[tuple[str, str], float] = {}
+    for m in methods:
+        cfg = default_config_for_array(32).replace(
+            method=m, noise=NoiseConfig(sigma_read_lsb=_SIGMA_READ)
+        )
+        rcfg = for_wv_method(cfg).replace(sigma_col_offset_lsb=_SIGMA_OFFSET)
+        tkey, okey, ckey, pkey = jax.random.split(jax.random.PRNGKey(0), 4)
+        targets = jax.random.randint(
+            tkey, (n_columns, cfg.n_cells), 0, cfg.device.levels
+        ).astype(jnp.float32)
+        offsets = sample_col_offsets(okey, n_columns, rcfg)
+        trimmed = calibrate_offsets(ckey, offsets, rcfg, k_reads=_K_CAL)
+
+        fn = jax.jit(
+            lambda k, t, o, cfg=cfg: program_columns(k, t, cfg, col_offset=o)
+        )
+        for scenario, offs in (
+            ("clean", None),
+            ("drifted", offsets),
+            ("calibrated", trimmed),
+        ):
+            (g, st), us = timed(fn, pkey, targets, offs)
+            r = float(jnp.mean(st.rms_error_lsb))
+            en = float(jnp.mean(st.energy_pj))
+            rms[(m.value, scenario)] = r
+            rows[f"{m.value}.{scenario}.rms_cell_lsb"] = r
+            rows[f"{m.value}.{scenario}.energy_pj"] = en
+            derived = f"rms={r:.3f} energy_pj={en:.0f}"
+            if scenario == "calibrated":
+                # Reference tuning overhead: K full-SAR sweeps per
+                # column (calibrate_offsets always reads through the SAR
+                # converter regardless of the method's verify converter),
+                # priced by the same sweep model WV verify pays.
+                _, e_cal = sweep_cost(
+                    rcfg.replace(converter=Converter.SAR, avg_reads=1),
+                    CircuitCost(),
+                )
+                overhead = _K_CAL * float(e_cal) / en
+                rows[f"{m.value}.calibration_energy_frac"] = overhead
+                derived += f" cal_overhead={overhead:.3f}"
+            emit(f"readout.{m.value}.{scenario}", us, derived)
+
+    # --- contract: drift poisons one-hot readouts, calibration rescues
+    # them, Hadamard readouts are structurally immune.
+    one_hot = [m for m in methods
+               if for_wv_method(default_config_for_array(32).replace(method=m)
+                                ).basis == ReadoutBasis.ONE_HOT]
+    hadamard = [m for m in methods if m not in one_hot]
+    for m in one_hot:
+        degr = rms[(m.value, "drifted")] / rms[(m.value, "clean")]
+        recov = rms[(m.value, "calibrated")] / rms[(m.value, "clean")]
+        assert degr > 2.0, (m.value, degr)
+        assert recov < 1.4, (m.value, recov)
+        for h in hadamard:
+            degr_h = rms[(h.value, "drifted")] / rms[(h.value, "clean")]
+            assert degr_h < 0.5 * degr, (h.value, degr_h, m.value, degr)
+    emit("readout.contract", 0.0,
+         "onehot-degrades calibration-recovers hadamard-immune")
+
+    result = dict(
+        quick=quick,
+        sigma_read_lsb=_SIGMA_READ,
+        sigma_col_offset_lsb=_SIGMA_OFFSET,
+        k_calibration_reads=_K_CAL,
+        n_columns=n_columns,
+        **rows,
+    )
+    name = "BENCH_readout_quick.json" if quick else "BENCH_readout.json"
+    out = pathlib.Path(__file__).with_name(name)
+    out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main(quick="--quick" in sys.argv)

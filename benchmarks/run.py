@@ -1,39 +1,64 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# Each registered benchmark runs in sequence; a benchmark that raises
+# aborts the run LOUDLY — full traceback to stderr and a non-zero exit —
+# so CI and sweep drivers can never mistake a half-finished run for a
+# passing one.
 from __future__ import annotations
 
+import sys
 import time
+import traceback
 
 
-def main() -> None:
-    t0 = time.time()
+def _registry():
     from . import (
+        cim_inference,
+        deploy_throughput,
         fig9_convergence,
         fig9c_common_mode,
         fig10_robustness,
         fig12_iso_footprint,
         fig13_latency_energy,
+        kernels_bench,
+        readout_sweep,
         retention_refresh,
         table2_prior_work,
-        kernels_bench,
-        deploy_throughput,
-        cim_inference,
     )
 
+    return [
+        ("fig9.tau_sweep", lambda: fig9_convergence.main(sweep_tau=True)),
+        ("fig9.convergence", fig9_convergence.convergence_curves),
+        ("fig9.n_scaling", fig9_convergence.n_scaling),
+        ("fig9c.common_mode", fig9c_common_mode.main),
+        ("fig10.robustness", fig10_robustness.main),
+        ("fig11.iso_footprint_64", fig10_robustness.main_fig11),
+        ("fig12.iso_footprint", fig12_iso_footprint.main),
+        ("fig13.latency_energy_32", lambda: fig13_latency_energy.main(32)),
+        ("fig13.latency_energy_64", lambda: fig13_latency_energy.main(64)),
+        ("table2.prior_work", table2_prior_work.main),
+        ("retention.refresh", retention_refresh.main),
+        ("kernels.bench", kernels_bench.main),
+        ("deploy.throughput", deploy_throughput.main),
+        ("cim.inference", cim_inference.main),
+        ("readout.sweep", readout_sweep.main),
+    ]
+
+
+def main() -> None:
+    t0 = time.time()
     print("name,us_per_call,derived")
-    fig9_convergence.main(sweep_tau=True)
-    fig9_convergence.convergence_curves()
-    fig9_convergence.n_scaling()
-    fig9c_common_mode.main()
-    fig10_robustness.main()
-    fig10_robustness.main_fig11()
-    fig12_iso_footprint.main()
-    fig13_latency_energy.main(32)
-    fig13_latency_energy.main(64)
-    table2_prior_work.main()
-    retention_refresh.main()
-    kernels_bench.main()
-    deploy_throughput.main()
-    cim_inference.main()
+    for name, fn in _registry():
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            print(
+                f"benchmarks.total,{(time.time() - t0) * 1e6:.0f},"
+                f"FAILED:{name}",
+                file=sys.stderr,
+            )
+            sys.exit(1)
     print(f"benchmarks.total,{(time.time() - t0) * 1e6:.0f},all-passed")
 
 

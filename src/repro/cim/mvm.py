@@ -28,7 +28,11 @@ where `leaf_key` is the executor's per-access key (re-folded every
 engine step) and `token` is the flattened batch index of the call.  A
 token's noise therefore depends only on (access key, tile, plane,
 token index) — NOT on how many other tokens share the batch — so a
-batched forward is bit-reproducible across batch shapes.
+batched forward is bit-reproducible across batch shapes.  The sampler
+itself (`readout.noise.sample_token_read_noise`) and the per-slice ADC
+quantizer (`readout.converter.sar_quantize`, reached through the
+`cim_vmm` epilogue) are the SAME models the WV verify path reads
+through — one readout subsystem, DESIGN.md Sec. 12.
 
 In the ideal limit (``dac_bits=None``, ``adc_bits=None``,
 ``sigma_read_lsb=0``) the whole pipeline collapses algebraically to
@@ -45,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.core import rng
 from repro.kernels.acim_vmm import ops as vmm_ops
+from repro.readout import noise as ro_noise
 
 from .tile import CIMWeight
 
@@ -132,21 +137,6 @@ def _dac_stream(xf: jax.Array, cfg: CIMConfig) -> tuple[jax.Array, jax.Array]:
     return jnp.stack(planes), jnp.stack(weights)
 
 
-def _read_noise(
-    key: jax.Array, n_tokens: int, n_slices: int, m: int, cfg: CIMConfig
-) -> jax.Array | None:
-    """Per-read noise for one (tile, plane): (S, T, M), or None if clean.
-
-    Token sub-streams fold the flattened batch index, so token i's draw
-    is independent of the batch size it rides in.
-    """
-    if cfg.sigma_read_lsb <= 0.0:
-        return None
-    tok_keys = rng.fold_col_keys(key, jnp.arange(n_tokens, dtype=jnp.int32))
-    nz = rng.normal(tok_keys, (n_tokens, n_slices, m))
-    return cfg.sigma_read_lsb * jnp.transpose(nz, (1, 0, 2))
-
-
 def cim_matmul(x: jax.Array, w: CIMWeight) -> jax.Array:
     """Analog forward for one weight leaf: x (..., K) -> (..., M).
 
@@ -179,7 +169,9 @@ def cim_matmul(x: jax.Array, w: CIMWeight) -> jax.Array:
             k_tile = rng.fold_in(w.key, ti)
             noise = jnp.concatenate(
                 [
-                    _read_noise(rng.fold_in(k_tile, pi), t, s, m, cfg)
+                    ro_noise.sample_token_read_noise(
+                        rng.fold_in(k_tile, pi), t, s, m, cfg.sigma_read_lsb
+                    )
                     for pi in range(p)
                 ],
                 axis=1,

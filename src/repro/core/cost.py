@@ -1,8 +1,11 @@
 """Circuit-level latency / energy cost model (paper Table 1, Sec. 5.3).
 
-Per-iteration cost of a column verification sweep + write phase, for each
-WV method.  All methods share the column-wise write backend (Fig. 5); they
-differ in the verify read:
+This module owns the Table-1 CONSTANTS (`CircuitCost`, plus `ADCConfig`
+in core.types) and the write/inference phase pricing.  The verify READ
+phase is priced by the shared readout subsystem from the same constants
+(`repro.readout.cost.sweep_cost`, generalized over the basis x converter
+matrix); `read_phase_cost` below is the WVConfig-facing wrapper kept for
+the per-method call sites:
 
   CW-SC : N one-hot reads, compare-only ADC       (N x (t_pulse + t_cmp))
   MRA-M : M*N one-hot reads, full SAR each        (M*N x (t_pulse + t_sar))
@@ -10,11 +13,6 @@ differ in the verify read:
           + inverse-Hadamard digital decode
   HARP  : N Hadamard reads, compare-only (1-2 cmp)(N x (t_pulse + t_cmp'))
           + ternary inverse-Hadamard aggregate
-
-Decode streaming (Sec. 3.2 "digital decoding"): measurements stream into
-the shift-and-add periphery, so adder latency pipelines behind the next
-read (t_adder = 5 ns << t_pulse + t_adc); only a single tail add lands on
-the critical path.  Adder *energy* is paid once per pattern per column.
 
 Write phase: SET and RESET pulses are applied column-parallel; the phase
 latency is max(pulses) * t_write within each phase, and energy is
@@ -66,47 +64,17 @@ def read_phase_cost(
     """(latency_ns, energy_pj) of one verification sweep of one column.
 
     `n_compares`: (..., N) per-measurement comparison counts for
-    compare-only modes (HARP's 1-or-2); scalar 1 for CW-SC if None.
+    compare-only modes (HARP's 1-or-2); the 1.5/read expectation if None.
     Returns scalars (or batched arrays if n_compares is batched).
+
+    Thin wrapper: maps the WV method onto its readout config and prices
+    the sweep with `repro.readout.cost.sweep_cost` (imported lazily —
+    core.cost is a readout dependency, so the module level would cycle).
     """
-    adc, n = cfg.adc, cfg.n_cells
-    m = cfg.method
-    if m == WVMethod.CW_SC:
-        if n_compares is None:
-            cmp_total = jnp.asarray(1.5 * n, jnp.float32)
-        else:
-            cmp_total = jnp.sum(n_compares.astype(jnp.float32), axis=-1)
-        lat = (
-            n * (adc.t_read_pulse_ns + adc.t_compare_ns)
-            + (cmp_total - n) * adc.t_compare_ns
-        )
-        e = n * adc.e_tia_pj + cmp_total * adc.e_compare_pj
-        return jnp.asarray(lat, jnp.float32), jnp.asarray(e, jnp.float32)
-    if m == WVMethod.MRA:
-        reads = cfg.mra_reads * n
-        lat = reads * (adc.t_read_pulse_ns + adc.t_sar_ns)
-        e = reads * (adc.e_tia_pj + adc.e_sar_pj)
-        return jnp.asarray(lat, jnp.float32), jnp.asarray(e, jnp.float32)
-    if m == WVMethod.HD_PV:
-        lat = n * (adc.t_read_pulse_ns + adc.t_sar_ns) + cost.t_adder_ns
-        e = n * (adc.e_tia_pj + adc.e_sar_pj) + n * cost.e_adder_hdpv_pj
-        return jnp.asarray(lat, jnp.float32), jnp.asarray(e, jnp.float32)
-    if m == WVMethod.HARP:
-        if n_compares is None:
-            cmp_total = jnp.asarray(1.5 * n, jnp.float32)
-        else:
-            cmp_total = jnp.sum(n_compares.astype(jnp.float32), axis=-1)
-        # compare latency: the second comparison reuses the sampled value;
-        # per-read critical path is t_pulse + t_cmp (first) and the rare
-        # second compare adds t_cmp again.
-        lat = (
-            n * (adc.t_read_pulse_ns + adc.t_compare_ns)
-            + (cmp_total - n) * adc.t_compare_ns
-            + cost.t_adder_ns
-        )
-        e = n * adc.e_tia_pj + cmp_total * adc.e_compare_pj + n * cost.e_adder_harp_pj
-        return jnp.asarray(lat, jnp.float32), jnp.asarray(e, jnp.float32)
-    raise ValueError(m)
+    from repro.readout import config as ro_config
+    from repro.readout import cost as ro_cost
+
+    return ro_cost.sweep_cost(ro_config.for_wv_method(cfg), cost, n_compares)
 
 
 def write_phase_cost(

@@ -13,6 +13,13 @@ Implements all four WV schemes behind one vectorized loop:
            (eq. 9), ternary aggregate s_w = H^T s_y (eq. 10), threshold
            tau_w (eq. 11); 1 fine pulse/iteration.
 
+The verify READ itself — basis encode, noise sampling, converter
+quantization, per-sweep cost — is owned by the shared readout subsystem
+(`repro.readout`, DESIGN.md Sec. 12): each method is one point of the
+basis x converter x averaging matrix (`readout.for_wv_method`), and this
+module only owns the key schedule, the decision logic on the returned
+measurements, and the write phase.
+
 The engine runs ONE `lax.while_loop` over WV iterations for an arbitrary
 batch of columns simultaneously, with per-cell freeze masks (streak
 counter, Sec. 3.1) and per-column active masks — the idiomatic way to
@@ -22,11 +29,13 @@ Physical modelling notes:
 * Verify reads always sense the WHOLE column (frozen cells keep
   contributing current); frozen cells merely ignore their decisions.
 * mu_cm is redrawn per column per sweep and shared by every measurement
-  in that sweep (incl. all M reads of MRA) — see core.noise.
+  in that sweep (incl. all M reads of MRA) — see readout.noise.
 * Compare-mode targets are first quantized onto the ADC code grid (the
-  comparator's DAC can only produce code levels).
-* Costs follow core.cost; per-column latency/energy accumulate only while
-  the column is still active.
+  comparator's DAC can only produce code levels) — readout owns that.
+* Costs follow readout.cost / core.cost; per-column latency/energy
+  accumulate only while the column is still active.
+* An optional static per-column converter offset (`col_offset`,
+  reference drift — readout.calibrate) biases every verify read.
 
 Shapes: targets (C, N) float32 integer levels; returns g (C, N) and a
 `WVStats` pytree of per-column diagnostics.
@@ -39,12 +48,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import adc as adc_mod
+from repro.readout import config as ro_config
+from repro.readout import cost as ro_cost
+from repro.readout import readout as ro
+
 from . import device as dev_mod
-from . import hadamard as hd
-from . import noise as noise_mod
 from . import rng
-from .cost import CircuitCost, read_phase_cost, write_phase_cost
+from .cost import CircuitCost, write_phase_cost
 from .types import WVConfig, WVMethod
 
 __all__ = ["WVStats", "program_columns", "verify_aggregate", "verify_sweep"]
@@ -62,23 +72,20 @@ class WVStats(NamedTuple):
     frozen_frac: jax.Array     # fraction of cells frozen at termination
 
 
-def _fwht(x: jax.Array, cfg: WVConfig) -> jax.Array:
-    if cfg.use_pallas:
-        from repro.kernels.fwht import ops as fwht_ops
-
-        return fwht_ops.fwht(x)
-    return hd.fwht(x)
-
-
 def verify_aggregate(
-    key: jax.Array, g: jax.Array, targets: jax.Array, cfg: WVConfig
+    key: jax.Array,
+    g: jax.Array,
+    targets: jax.Array,
+    cfg: WVConfig,
+    col_offset: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, float]:
     """One verification sweep, stopping BEFORE the ternary threshold.
 
     The pre-threshold aggregate is what the fused Pallas cell-update
     kernel consumes (it applies the threshold in VMEM); `verify_sweep`
     applies it in jnp for the unfused path.  `key` may be a batch of
-    per-column keys (batched-pipeline RNG policy).
+    per-column keys (batched-pipeline RNG policy).  The physical read is
+    one `readout.read_columns` sweep under the method's readout config.
 
     Returns:
       agg:      (C, N) decision aggregate — the decoded deviation for
@@ -90,58 +97,25 @@ def verify_aggregate(
       threshold: static decision threshold such that
         decision = sign(agg) * (|agg| > threshold).
     """
-    noise_cfg, a = cfg.noise, cfg.adc
-    n, levels = cfg.n_cells, cfg.device.levels
+    rcfg = ro_config.for_wv_method(cfg)
     thr = cfg.decision_threshold_lsb
-    c = g.shape[0]
 
     if cfg.method == WVMethod.CW_SC:
-        nz = noise_mod.sample_sweep_noise(key, (c,), n, noise_cfg)
-        y = g + nz
-        t_grid = adc_mod.sar_read(targets, a, n, levels, centered=False)
-        sign, n_cmp = adc_mod.compare_read(y, t_grid, thr)
+        res = ro.read_columns(key, g, rcfg, targets=targets, col_offset=col_offset)
         # The comparator already made the ternary call; 0.5 re-thresholds
         # its {-1, 0, +1} output to itself.
-        return sign, jnp.ones_like(g), n_cmp, 0.5
+        return res.values, jnp.ones_like(g), res.n_compares, 0.5
 
-    if cfg.method == WVMethod.MRA:
-        m = cfg.mra_reads
-        k_uc, k_cm = rng.split(key)
-        n_uc = noise_cfg.sigma_uc_lsb * rng.normal(k_uc, (c, m, n))
-        mu_cm = noise_cfg.sigma_cm_lsb * rng.normal(k_cm, (c, 1, 1))
-        reads = adc_mod.sar_read(
-            g[:, None, :] + n_uc + mu_cm, a, n, levels, centered=False
-        )
-        w_hat = jnp.mean(reads, axis=1)
-        dev = w_hat - targets
-        return dev, jnp.abs(dev), jnp.zeros_like(g), thr
-
-    # Hadamard-domain methods: physical read is y = H g + noise.
-    y_true = _fwht(g, cfg)
-    nz = noise_mod.sample_sweep_noise(key, (c,), n, noise_cfg)
-    y = y_true + nz
-    centered = jnp.arange(n) > 0  # row 0 = all-ones (V_sam = GND range)
-
-    if cfg.method == WVMethod.HD_PV:
-        y_q = jnp.where(
-            centered,
-            adc_mod.sar_read(y, a, n, levels, centered=True),
-            adc_mod.sar_read(y, a, n, levels, centered=False),
-        )
-        w_hat = _fwht(y_q, cfg) / n  # inverse decode (eq. 6), digital adders
+    if cfg.method in (WVMethod.MRA, WVMethod.HD_PV):
+        res = ro.read_columns(key, g, rcfg, col_offset=col_offset)
+        w_hat = ro.decode_magnitude(res.values, rcfg)  # eq. 6 digital adders
         dev = w_hat - targets
         return dev, jnp.abs(dev), jnp.zeros_like(g), thr
 
     if cfg.method == WVMethod.HARP:
-        y_star = _fwht(targets, cfg)
-        y_star_grid = jnp.where(
-            centered,
-            adc_mod.sar_read(y_star, a, n, levels, centered=True),
-            adc_mod.sar_read(y_star, a, n, levels, centered=False),
-        )
-        s_y, n_cmp = adc_mod.compare_read(y, y_star_grid, thr)
-        s_w = _fwht(s_y, cfg)  # unnormalized H^T s_y (eq. 10)
-        return s_w, jnp.ones_like(g), n_cmp, cfg.tau_w
+        res = ro.read_columns(key, g, rcfg, targets=targets, col_offset=col_offset)
+        s_w = ro.decode_ternary(res.values, rcfg)  # unnormalized H^T s_y
+        return s_w, jnp.ones_like(g), res.n_compares, cfg.tau_w
 
     raise ValueError(cfg.method)
 
@@ -151,7 +125,11 @@ def _threshold(agg: jax.Array, thr: float) -> jax.Array:
 
 
 def verify_sweep(
-    key: jax.Array, g: jax.Array, targets: jax.Array, cfg: WVConfig
+    key: jax.Array,
+    g: jax.Array,
+    targets: jax.Array,
+    cfg: WVConfig,
+    col_offset: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One verification sweep for a batch of columns.
 
@@ -162,7 +140,7 @@ def verify_sweep(
         (pulse sizing); 1.0 placeholder for ternary methods.
       n_compares: (C, N) comparator operations (compare modes) else zeros.
     """
-    agg, dev_mag, n_cmp, thr = verify_aggregate(key, g, targets, cfg)
+    agg, dev_mag, n_cmp, thr = verify_aggregate(key, g, targets, cfg, col_offset)
     return _threshold(agg, thr), dev_mag, n_cmp
 
 
@@ -216,6 +194,7 @@ def program_columns(
     cost: CircuitCost | None = None,
     d2d: jax.Array | None = None,
     col_ids: jax.Array | None = None,
+    col_offset: jax.Array | None = None,
 ) -> tuple[jax.Array, WVStats]:
     """Program a batch of columns from HRS to integer target levels.
 
@@ -233,6 +212,8 @@ def program_columns(
         None, the legacy batch-shaped draws are used (same key schedule
         as pre-pipeline behaviour; the write-noise multiply was
         reassociated, so results match to the ulp, not bit-exactly).
+      col_offset: optional (C,) static per-column converter reference
+        offset biasing every verify read (readout.calibrate scenario).
 
     Returns (g_final, WVStats).
     """
@@ -242,6 +223,7 @@ def program_columns(
     c, n = targets.shape
     assert n == cfg.n_cells, (n, cfg.n_cells)
     dev_cfg = cfg.device
+    rcfg = ro_config.for_wv_method(cfg)
 
     if col_ids is None:
         k_d2d, k_coarse, k_loop = jax.random.split(key, 3)
@@ -270,9 +252,7 @@ def program_columns(
     pulses0 = jnp.sum(n_coarse, axis=-1)
 
     ternary = cfg.method in (WVMethod.CW_SC, WVMethod.HARP)
-    reads_per_sweep = (
-        cfg.mra_reads * n if cfg.method == WVMethod.MRA else n
-    )
+    reads_per_sweep = rcfg.reads_per_sweep
     # Freeze warmup (Sec. 3.1): streaks don't bite during the coarse-
     # residual transient; see types.WVConfig.freeze_warmup_iters.
     warmup = cfg.freeze_warmup_iters + (
@@ -284,7 +264,9 @@ def program_columns(
         k_v, k_w = rng.split(k_it)
         col_active = ~jnp.all(st.frozen, axis=-1)  # (C,)
 
-        agg, dev_mag, n_cmp, thr = verify_aggregate(k_v, st.g, targets, cfg)
+        agg, dev_mag, n_cmp, thr = verify_aggregate(
+            k_v, st.g, targets, cfg, col_offset
+        )
         can_freeze = st.it >= warmup
 
         if cfg.use_pallas:
@@ -346,7 +328,9 @@ def program_columns(
             g = jnp.where(col_active[:, None], g_new, st.g)
 
         # Cost accounting (active columns only).
-        lat_r, en_r = read_phase_cost(cfg, cost, n_compares=n_cmp if ternary else None)
+        lat_r, en_r = ro_cost.sweep_cost(
+            rcfg, cost, n_compares=n_cmp if ternary else None
+        )
         lat_w, en_w = write_phase_cost(st.g, n_p, direction, dev_cfg, cost)
         actf = col_active.astype(jnp.float32)
         return _LoopState(

@@ -8,7 +8,10 @@ and digital shift-and-add recombination:
     y = sum_l 2^(Bc*(l-1)) * ADC( x @ (G+_l - G-_l) + n_l )
 
 The ADC clamps each slice's analog partial sums to its full-scale range
-(n-bit over [-FS/2, FS/2]) — the same converter the verify path uses.
+(n-bit over [-FS/2, FS/2]) — literally the same converter model the
+verify path uses: `adc_quantize` is `repro.readout.converter.
+sar_quantize` in centered mode (the Pallas kernel inlines the identical
+expression in VMEM and is bit-identity-tested against this reference).
 `noise` (S, B, M) models per-read TIA/ADC thermal noise entering the
 analog partial sum before conversion; `adc_bits=None` is an ideal
 converter (identity), the limit in which the analog forward equals the
@@ -20,13 +23,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.readout.converter import sar_quantize
+
 
 def adc_quantize(y: jax.Array, bits: int, full_scale: float) -> jax.Array:
     """n-bit uniform quantization over [-FS/2, FS/2] (dequantized)."""
-    w = full_scale / float(1 << bits)
-    lo = -full_scale / 2.0
-    code = jnp.clip(jnp.round((jnp.clip(y, lo, -lo) - lo) / w), 0, (1 << bits) - 1)
-    return lo + code * w
+    return sar_quantize(y, bits, full_scale, centered=True)
 
 
 def acim_vmm(

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import readout as ro
 from repro.core import pipeline
 from repro.core.cost import CircuitCost, read_phase_cost
 from repro.core.types import WVConfig, WVMethod
@@ -134,9 +135,12 @@ def flag_columns(
 ) -> tuple[jax.Array, int]:
     """Voted verify sweeps -> ((C,) bool drifted-column mask, sweeps used).
 
-    Uses the configured WV method's own verify path (`verify_sweep`), so
-    HD-PV/HARP detection inherits exactly the paper's read model: N
-    Hadamard reads, common-mode cancellation, ADC quantization and all.
+    The detector is `sweeps` independent readout calls voted per cell:
+    each sweep is the configured WV method's own verify read
+    (`verify_sweep` -> `repro.readout.read_columns`), so HD-PV/HARP
+    detection inherits exactly the paper's read model — N Hadamard
+    reads, common-mode cancellation, ADC quantization and all — and the
+    vote accumulation is `readout.voted_signs` over fold-in sub-streams.
     A cell is bad when `votes` of `verify_sweeps` independent sweeps
     agree on its deviation sign; a column is flagged when more than
     `max_bad_cells` cells are bad.
@@ -149,13 +153,12 @@ def flag_columns(
     cfg = cfg.replace(
         decision_threshold_lsb=thr, tau_w=rc.tau_w_scale * cfg.tau_w
     )
+    if sweeps == 0:  # detection disabled: nothing read, nothing flagged
+        return jnp.zeros((g.shape[0],), bool), 0
     targets = targets.astype(jnp.float32)
-    pos = jnp.zeros_like(g)
-    neg = jnp.zeros_like(g)
-    for r in range(sweeps):
-        d, _, _ = verify_sweep(jax.random.fold_in(key, r), g, targets, cfg)
-        pos = pos + (d > 0.0)
-        neg = neg + (d < 0.0)
+    pos, neg = ro.voted_signs(
+        key, sweeps, lambda k: verify_sweep(k, g, targets, cfg)[0]
+    )
     bad = jnp.sum(jnp.maximum(pos, neg) >= votes, axis=-1)
     return bad > rc.max_bad_cells, sweeps
 

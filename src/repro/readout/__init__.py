@@ -1,0 +1,31 @@
+# The unified analog readout subsystem: ONE model of the read path
+# (basis x converter x averaging x impairments) shared by WV verify
+# (core.wv), lifetime refresh detection (lifetime.refresh), and CIM
+# inference ADC readout (cim.mvm / kernels.acim_vmm).  DESIGN.md Sec. 12.
+from .config import (  # noqa: F401
+    Converter,
+    ReadoutBasis,
+    ReadoutConfig,
+    for_wv_method,
+)
+from .converter import (  # noqa: F401
+    code_width_lsb,
+    compare_read,
+    full_scale_lsb,
+    sar_quantize,
+    sar_read,
+)
+from .noise import (  # noqa: F401
+    sample_read_fields,
+    sample_token_read_noise,
+)
+from .readout import (  # noqa: F401
+    ReadResult,
+    decode_magnitude,
+    decode_ternary,
+    encode,
+    read_columns,
+    voted_signs,
+)
+from .cost import sweep_cost  # noqa: F401
+from .calibrate import calibrate_offsets, sample_col_offsets  # noqa: F401

@@ -1,0 +1,79 @@
+"""Per-column converter offset drift and its calibration (reference tuning).
+
+Scenario (a la ADC reference tuning for CIM readout, arXiv:2502.05948):
+each column's converter carries a *static* reference/bias offset o_col,
+sampled once per column (like d2d) from N(0, sigma_col_offset^2).
+Unlike the per-sweep common mode mu_cm it never averages out across
+sweeps — single-cell (one-hot) readouts eat it as a systematic level
+error, which is exactly what reference tuning trims in hardware.
+(Hadamard readouts cancel any measurement-constant offset on the N-1
+balanced rows at decode — the same structural immunity as for mu_cm —
+so calibration matters most for one-hot converter fleets.)
+
+`calibrate_offsets` models the tuning procedure: read a reference
+column programmed at a known mid-scale level K times through the SAR
+converter, average the measurement-domain error, and subtract that
+estimate from the true offset.  The residual after trimming is
+~ sqrt(sigma_uc^2/(K*N) + sigma_cm^2/K) plus a quantization floor —
+reads are cheap (K full-SAR sweeps per column, priced by
+`readout.cost.sweep_cost`), so a handful of calibration reads turn
+offset drift from a systematic error into a small random one.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from typing import TYPE_CHECKING
+
+from repro.core import rng
+
+from . import config as config_mod
+from . import readout as ro
+
+if TYPE_CHECKING:
+    from .config import ReadoutConfig
+
+__all__ = ["sample_col_offsets", "calibrate_offsets"]
+
+
+def sample_col_offsets(
+    key: jax.Array, n_columns: int, cfg: ReadoutConfig
+) -> jax.Array:
+    """Static per-column converter reference offsets: (C,) in cell-LSB."""
+    return cfg.sigma_col_offset_lsb * jax.random.normal(key, (n_columns,))
+
+
+def calibrate_offsets(
+    key: jax.Array,
+    col_offset: jax.Array,
+    cfg: ReadoutConfig,
+    k_reads: int = 8,
+    ref_level: float | None = None,
+) -> jax.Array:
+    """Trim per-column offsets from K calibration reads of a reference.
+
+    Every column reads a reference column whose cells all sit at the
+    known `ref_level` (default mid-scale, which centres both the one-hot
+    range and the unbalanced Hadamard row 0 so neither rail clips the
+    offset).  The per-column mean measurement error over K independent
+    SAR sweeps estimates o_col; the return value is the RESIDUAL offset
+    ``col_offset - estimate`` to hand back to `read_columns` — i.e. the
+    read path after reference tuning.
+    """
+    c = col_offset.shape[0]
+    n = cfg.n_cells
+    if ref_level is None:
+        ref_level = 0.5 * (cfg.levels - 1)
+    g_ref = jnp.full((c, n), ref_level, jnp.float32)
+    cal_cfg = cfg.replace(converter=config_mod.Converter.SAR, avg_reads=1)
+    y_ref = ro.encode(g_ref, cal_cfg)
+
+    est = jnp.zeros((c,), jnp.float32)
+    for k in range(k_reads):
+        res = ro.read_columns(
+            rng.fold_in(key, k), g_ref, cal_cfg, col_offset=col_offset
+        )
+        est = est + jnp.mean(res.values - y_ref, axis=-1)
+    return col_offset - est / k_reads

@@ -1,0 +1,102 @@
+"""Column converter models: the one place SAR/compare math lives.
+
+Paper Fig. 7: a standard n-bit SAR ADC either
+
+* runs the full n-step binary search ("SAR logic"), producing a digital
+  code — modelled as uniform quantization over the converter's
+  full-scale range; or
+* is put in HARP's one-shot *compare* mode ("compare logic"): the
+  capacitor array is preset to the target code and the comparator makes
+  one (or two) decisions, yielding ternary {Low, Equal, High} — no code.
+
+Every consumer of a quantizing read dispatches here: the WV verify path
+(`core.wv` via `readout.read_columns`), refresh sweeps, and the CIM
+inference ADC epilogue (`kernels.acim_vmm.ref` delegates its per-slice
+`adc_quantize` to `sar_quantize`; the fused Pallas kernel implements the
+identical expression in VMEM and is bit-identity-tested against it).
+
+Full-scale convention (Sec. 3.2, V_sam reference switching): the verify
+ADC always spans ``N * (2^Bc - 1)`` cell-LSB of column current.
+
+* one-hot reads / first Hadamard row: range [0, FS]        (V_sam = GND)
+* balanced Hadamard rows:            range [-FS/2, +FS/2]  (V_sam = Vcm/2)
+
+Both use the same bit budget, so the ADC code width in cell-LSB is
+FS / 2^bits regardless of mode — single-cell (one-hot) SAR reads
+therefore use only 1/N of the converter's dynamic range, one of the
+structural advantages of reading in the Hadamard basis.  The CIM
+inference converter spans the signed macro range ``+-R * (2^Bc - 1)``
+per slice — same primitive, different full scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ADCConfig
+
+__all__ = [
+    "full_scale_lsb",
+    "code_width_lsb",
+    "sar_quantize",
+    "sar_read",
+    "compare_read",
+]
+
+
+def full_scale_lsb(n_cells: int, levels: int) -> float:
+    return float(n_cells * (levels - 1))
+
+
+def code_width_lsb(adc: ADCConfig, n_cells: int, levels: int) -> float:
+    return full_scale_lsb(n_cells, levels) / float(1 << adc.bits)
+
+
+def sar_quantize(
+    y: jax.Array, bits: int, full_scale: float, centered: bool = True
+) -> jax.Array:
+    """n-bit uniform quantization over the full-scale range (dequantized).
+
+    `centered` selects [-FS/2, +FS/2]; otherwise [0, FS].  Returns
+    code * width + lo in the input units, saturating at the rails.  This
+    is THE converter primitive: `sar_read` wraps it with the verify-path
+    full-scale convention and the CIM ADC epilogue calls it per slice.
+    """
+    w = full_scale / float(1 << bits)
+    lo = -full_scale / 2.0 if centered else 0.0
+    code = jnp.clip(
+        jnp.round((jnp.clip(y, lo, lo + full_scale) - lo) / w),
+        0,
+        (1 << bits) - 1,
+    )
+    return lo + code * w
+
+
+def sar_read(
+    y: jax.Array, adc: ADCConfig, n_cells: int, levels: int, centered: bool
+) -> jax.Array:
+    """Full SAR conversion of a verify read: quantize y (cell-LSB) to the
+    ADC grid over the column full scale ``N * (2^Bc - 1)``."""
+    return sar_quantize(y, adc.bits, full_scale_lsb(n_cells, levels), centered)
+
+
+def compare_read(
+    y: jax.Array, target: jax.Array, deadzone_lsb: float
+) -> tuple[jax.Array, jax.Array]:
+    """One-shot compare mode (eq. 9): ternary sign of (y - target).
+
+    The comparator presets the capacitor array to the target code and
+    compares; a second comparison against the adjacent code resolves the
+    'Equal' band.  Returns (sign in {-1, 0, +1}, comparisons in {1, 2}).
+
+    Comparison counting follows Fig. 7(c): the first comparison resolves
+    "below target"; only a not-below outcome needs the second comparison
+    against target+1 to separate Equal from High.
+    """
+    diff = y - target
+    below = diff < -deadzone_lsb
+    above = diff > deadzone_lsb
+    sign = jnp.where(below, -1.0, jnp.where(above, 1.0, 0.0))
+    n_cmp = jnp.where(below, 1, 2).astype(jnp.int32)
+    return sign, n_cmp

@@ -1,0 +1,85 @@
+"""Latency / energy of one readout sweep (paper Table 1, Sec. 5.3).
+
+`sweep_cost` prices exactly the sweep `readout.read_columns` performs,
+from the same `ReadoutConfig` — the basis/converter matrix replaces the
+old per-WV-method switch (the four methods are the four corners):
+
+  one-hot  + COMPARE (CW-SC) : N x (t_pulse + t_cmp), rare 2nd compare
+  one-hot  + SAR M=M (MRA-M) : M*N x (t_pulse + t_sar)
+  Hadamard + SAR     (HD-PV) : N x (t_pulse + t_sar) + decode adder
+  Hadamard + COMPARE (HARP)  : N x (t_pulse + t_cmp') + ternary adder
+
+Decode streaming (Sec. 3.2 "digital decoding"): measurements stream
+into the shift-and-add periphery, so adder latency pipelines behind the
+next read (t_adder = 5 ns << t_pulse + t_adc); only a single tail add
+lands on the critical path.  Adder *energy* is paid once per pattern
+per column — at the multi-bit rate for code-producing (SAR) reads and
+the cheaper ternary rate for compare reads.
+
+The IDEAL converter is an analysis limit with no hardware realization;
+it is priced as a full SAR conversion so idealized sweeps never read as
+free in an energy comparison.
+
+Units: ns and pJ.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from typing import TYPE_CHECKING
+
+from repro.core.cost import CircuitCost
+
+# Module-style sibling import: survives the core.wv <-> repro.readout
+# import cycle regardless of entry point.
+from . import config as config_mod
+
+if TYPE_CHECKING:
+    from .config import ReadoutConfig
+
+__all__ = ["sweep_cost"]
+
+
+def sweep_cost(
+    cfg: ReadoutConfig,
+    cost: CircuitCost,
+    n_compares: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(latency_ns, energy_pj) of one readout sweep of one column.
+
+    `n_compares`: (..., N) per-measurement comparison counts for the
+    COMPARE converter (1-or-2 per Fig. 7(c)); the 1.5/read expectation
+    is assumed if None.  Returns scalars (or batched arrays if
+    n_compares is batched).
+    """
+    adc, n = cfg.adc, cfg.n_cells
+    hadamard = cfg.basis == config_mod.ReadoutBasis.HADAMARD
+
+    if cfg.converter == config_mod.Converter.COMPARE:
+        if n_compares is None:
+            cmp_total = jnp.asarray(1.5 * n, jnp.float32)
+        else:
+            cmp_total = jnp.sum(n_compares.astype(jnp.float32), axis=-1)
+        # Compare latency: the second comparison reuses the sampled
+        # value; per-read critical path is t_pulse + t_cmp (first) and
+        # the rare second compare adds t_cmp again.
+        lat = (
+            n * (adc.t_read_pulse_ns + adc.t_compare_ns)
+            + (cmp_total - n) * adc.t_compare_ns
+        )
+        e = n * adc.e_tia_pj + cmp_total * adc.e_compare_pj
+        if hadamard:
+            lat = lat + cost.t_adder_ns
+            e = e + n * cost.e_adder_harp_pj
+        return jnp.asarray(lat, jnp.float32), jnp.asarray(e, jnp.float32)
+
+    # Code-producing converters: SAR, and IDEAL priced as SAR.
+    reads = cfg.avg_reads * n
+    lat = reads * (adc.t_read_pulse_ns + adc.t_sar_ns)
+    e = reads * (adc.e_tia_pj + adc.e_sar_pj)
+    if hadamard:
+        lat = lat + cost.t_adder_ns
+        e = e + n * cost.e_adder_hdpv_pj
+    return jnp.asarray(lat, jnp.float32), jnp.asarray(e, jnp.float32)

@@ -1,0 +1,79 @@
+"""The ONE read-noise sampler for every analog read path (eqs. 2-4).
+
+For one verification sweep of a column read with patterns a_1..a_N:
+
+    y_hat_i = a_i^T w  +  n_uc,i  +  mu_cm  +  o_col
+
+* n_uc,i ~ N(0, sigma_uc^2) i.i.d. per measurement (TIA/ADC thermal
+  noise) — independent across patterns AND across repeated reads, so
+  multi-read averaging does average it down (~1/M in variance).
+* mu_cm ~ N(0, sigma_cm^2) per column per sweep — constant across all N
+  patterns AND all M averaged reads of that sweep (shared TIA/ADC
+  offset, reference drift within the sweep, IR drop), independent
+  across columns.  Multi-read averaging does NOT remove it; Hadamard
+  decoding cancels it exactly for the N-1 balanced rows (eq. 7).
+* o_col — *static* per-column converter reference offset (sampled once
+  per column like d2d, constant across sweeps; see `readout.calibrate`).
+  Injected by `readout.read_columns`, not sampled here.
+
+RNG contract: callers hand a key that is either a single sweep key or a
+batch of per-column keys (`core.rng` fold-in sub-streams, DESIGN.md
+Sec. 10); both route through `core.rng`'s batch-transparent wrappers.
+
+This module also owns the CIM inference read-noise policy (DESIGN.md
+Sec. 11): per-(tile, plane) keys fan out to per-token sub-streams via
+``fold_in(key, token)``, so a token's draw is independent of the batch
+shape it rides in.
+
+Units: cell-LSB throughout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+from repro.core.types import NoiseConfig
+
+__all__ = ["sample_read_fields", "sample_token_read_noise"]
+
+
+def sample_read_fields(
+    key: jax.Array,
+    batch_shape: tuple[int, ...],
+    n_reads: int,
+    n_meas: int,
+    noise: NoiseConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw noise fields for one sweep of M averaged reads.
+
+    Returns (n_uc, mu_cm): (*batch, M, n_meas) uncorrelated noise and a
+    (*batch, 1, 1) per-column common-mode offset shared by every
+    measurement of every averaged read in the sweep.  Kept separate so
+    the caller controls the summation order against the true signal
+    (the single-read and M-read paths historically associate
+    differently; `read_columns` preserves both bit-exactly).
+    """
+    k_uc, k_cm = rng.split(key)
+    n_uc = noise.sigma_uc_lsb * rng.normal(k_uc, (*batch_shape, n_reads, n_meas))
+    mu_cm = noise.sigma_cm_lsb * rng.normal(
+        k_cm, (*batch_shape,) + (1,) * 2
+    )
+    return n_uc, mu_cm
+
+
+def sample_token_read_noise(
+    key: jax.Array, n_tokens: int, n_slices: int, m: int, sigma_lsb: float
+) -> jax.Array | None:
+    """Per-read CIM inference noise for one (tile, plane): (S, T, M).
+
+    Token sub-streams fold the flattened batch index, so token i's draw
+    is independent of the batch size it rides in.  Returns None when the
+    path is clean (sigma <= 0) so callers can skip the noise operand.
+    """
+    if sigma_lsb <= 0.0:
+        return None
+    tok_keys = rng.fold_col_keys(key, jnp.arange(n_tokens, dtype=jnp.int32))
+    nz = rng.normal(tok_keys, (n_tokens, n_slices, m))
+    return sigma_lsb * jnp.transpose(nz, (1, 0, 2))

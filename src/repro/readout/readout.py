@@ -1,0 +1,207 @@
+"""`read_columns`: the single entry point onto the analog read path.
+
+One call = one verification sweep of a batch of columns: basis encode
+(the *physical* summation of cell currents under the drive patterns),
+noise injection (owned by `readout.noise`), optional static per-column
+converter offset, converter conversion (`readout.converter`), and
+M-read averaging.  Everything the WV engine, the refresh detector, and
+(via the shared converter primitive) the CIM inference epilogue know
+about reading a column goes through here; cost accounting for the same
+sweep lives in `readout.cost.sweep_cost`.
+
+Ownership contract (DESIGN.md Sec. 12):
+
+* the CALLER owns the key schedule (which sweep gets which key) and the
+  decision logic applied to the returned measurements;
+* READOUT owns what happens between conductances and digital numbers:
+  noise sampling, offset injection, quantization, averaging;
+* COST for a sweep is priced by `readout.cost.sweep_cost` from the same
+  `ReadoutConfig` — consumers never hand-roll converter timing.
+
+Decode helpers (`decode_magnitude` / `decode_ternary`) invert the basis
+digitally — the shift-and-add periphery of Sec. 3.2 — and are gated on
+`ReadoutConfig.use_pallas` to route through the fused FWHT kernel.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+from repro.core import hadamard as hd
+
+# Sibling modules are imported as modules (attributes resolved at call
+# time): core.wv imports this package, so `from .config import X` here
+# would break when the import cycle is entered via repro.readout.
+from . import config as config_mod
+from . import converter as conv_mod
+from . import noise as noise_mod
+
+if TYPE_CHECKING:
+    from .config import ReadoutConfig
+
+__all__ = [
+    "ReadResult",
+    "read_columns",
+    "encode",
+    "decode_magnitude",
+    "decode_ternary",
+    "voted_signs",
+]
+
+
+class ReadResult(NamedTuple):
+    """What one sweep hands the digital periphery (all measurement-domain).
+
+    values:     (C, N) converter output — dequantized codes for SAR,
+                raw analog for IDEAL, ternary signs in {-1, 0, +1} for
+                COMPARE.  M averaged reads are already collapsed.
+    n_compares: (C, N) comparator operations issued (COMPARE: 1 or 2
+                per Fig. 7(c)); zeros for code-producing converters.
+    n_reads:    static physical column reads this sweep (M * N).
+    """
+
+    values: jax.Array
+    n_compares: jax.Array
+    n_reads: int
+
+
+def _fwht(x: jax.Array, cfg: ReadoutConfig) -> jax.Array:
+    if cfg.use_pallas:
+        from repro.kernels.fwht import ops as fwht_ops
+
+        return fwht_ops.fwht(x)
+    return hd.fwht(x)
+
+
+def encode(g: jax.Array, cfg: ReadoutConfig) -> jax.Array:
+    """Noiseless physical read: cell conductances -> measurement domain."""
+    if cfg.basis == config_mod.ReadoutBasis.HADAMARD:
+        return _fwht(g, cfg)
+    return g
+
+
+def _centered_sar(y: jax.Array, cfg: ReadoutConfig) -> jax.Array:
+    """SAR-convert measurements with the V_sam range convention.
+
+    Hadamard row 0 (all-ones) reads over [0, FS]; the balanced rows are
+    re-centred to [-FS/2, FS/2] (Sec. 3.2).  One-hot reads are all
+    single-cell currents over [0, FS].
+    """
+    a, n, levels = cfg.adc, cfg.n_cells, cfg.levels
+    if cfg.basis == config_mod.ReadoutBasis.HADAMARD:
+        centered = jnp.arange(n) > 0
+        return jnp.where(
+            centered,
+            conv_mod.sar_read(y, a, n, levels, centered=True),
+            conv_mod.sar_read(y, a, n, levels, centered=False),
+        )
+    return conv_mod.sar_read(y, a, n, levels, centered=False)
+
+
+def read_columns(
+    key: jax.Array,
+    g: jax.Array,
+    cfg: ReadoutConfig,
+    *,
+    targets: jax.Array | None = None,
+    col_offset: jax.Array | None = None,
+) -> ReadResult:
+    """One verification sweep of a batch of columns.
+
+    Args:
+      key: sweep key, or a batch of per-column keys (`core.rng`
+        sub-streams; DESIGN.md Sec. 10).
+      g: (C, N) true cell conductances in cell-LSB.
+      cfg: the read path (basis / converter / averaging / impairments).
+      targets: (C, N) intended integer levels — REQUIRED for the COMPARE
+        converter (the comparator presets to the target code, quantized
+        onto the ADC grid because its DAC can only produce code levels).
+      col_offset: optional (C,) static per-column converter reference
+        offset in cell-LSB, added to every measurement (see
+        `readout.calibrate`; distinct from the per-sweep mu_cm).
+
+    Returns a `ReadResult`; see the class docstring.
+    """
+    c, n = g.shape
+    assert n == cfg.n_cells, (n, cfg.n_cells)
+    m = cfg.avg_reads
+
+    y_true = encode(g, cfg)
+    n_uc, mu_cm = noise_mod.sample_read_fields(key, (c,), m, n, cfg.noise)
+    # Summation order is part of the bit-compat contract with the
+    # pre-refactor per-method implementations: single-read sweeps
+    # materialize the combined noise field first; M-read sweeps add the
+    # per-read field to the signal before the shared common mode.
+    if m == 1:
+        y = y_true + (n_uc + mu_cm).reshape(c, n)
+    else:
+        y = (y_true[:, None, :] + n_uc) + mu_cm
+    if col_offset is not None:
+        y = y + col_offset.reshape((c,) + (1,) * (y.ndim - 1))
+
+    zeros = jnp.zeros((c, n), jnp.int32)
+    if cfg.converter == config_mod.Converter.IDEAL:
+        vals = y if m == 1 else jnp.mean(y, axis=1)
+        return ReadResult(vals, zeros, m * n)
+
+    if cfg.converter == config_mod.Converter.SAR:
+        q = _centered_sar(y, cfg)
+        vals = q if m == 1 else jnp.mean(q, axis=1)
+        return ReadResult(vals, zeros, m * n)
+
+    if cfg.converter == config_mod.Converter.COMPARE:
+        # avg_reads == 1 is guaranteed by ReadoutConfig.__post_init__.
+        if targets is None:
+            raise ValueError("compare-mode readout needs targets")
+        t_grid = _centered_sar(encode(targets, cfg), cfg)
+        sign, n_cmp = conv_mod.compare_read(y, t_grid, cfg.deadzone_lsb)
+        return ReadResult(sign, n_cmp, n)
+
+    raise ValueError(cfg.converter)
+
+
+def decode_magnitude(values: jax.Array, cfg: ReadoutConfig) -> jax.Array:
+    """Digital basis inversion to a cell-domain estimate (eq. 6):
+    (1/N) H^T y for Hadamard reads, identity for one-hot."""
+    if cfg.basis == config_mod.ReadoutBasis.HADAMARD:
+        return _fwht(values, cfg) / cfg.n_cells
+    return values
+
+
+def decode_ternary(signs: jax.Array, cfg: ReadoutConfig) -> jax.Array:
+    """HARP's unnormalized ternary aggregate s_w = H^T s_y (eq. 10) for
+    Hadamard reads; identity for one-hot (CW-SC's signs ARE per-cell)."""
+    if cfg.basis == config_mod.ReadoutBasis.HADAMARD:
+        return _fwht(signs, cfg)
+    return signs
+
+
+def voted_signs(
+    key: jax.Array,
+    sweeps: int,
+    decision_fn: Callable[[jax.Array], jax.Array],
+) -> tuple[jax.Array, jax.Array]:
+    """Repeat a ternary readout decision over independent sub-streams.
+
+    Runs `decision_fn(fold_in(key, r))` for r in [0, sweeps) and counts
+    positive / negative decisions per cell — the repetition vote the
+    refresh detector uses to crush single-sweep false alarms (a lone
+    sweep at the programming threshold fires on nearly every healthy
+    column).  Returns (pos_counts, neg_counts), float arrays shaped like
+    one decision.
+    """
+    if sweeps < 1:
+        raise ValueError(f"voted_signs needs at least one sweep, got {sweeps}")
+    pos = neg = None
+    for r in range(sweeps):
+        d = decision_fn(rng.fold_in(key, r))
+        if pos is None:
+            pos = jnp.zeros_like(d)
+            neg = jnp.zeros_like(d)
+        pos = pos + (d > 0.0)
+        neg = neg + (d < 0.0)
+    return pos, neg

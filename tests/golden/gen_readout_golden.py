@@ -1,0 +1,133 @@
+"""Regenerate tests/golden/readout_golden.npz.
+
+The archive pins the exact numerical outputs of the verify / refresh /
+CIM read paths under fixed PRNG keys.  It was captured from the
+pre-readout-refactor tree (PR 3 head) and is asserted bit-exactly by
+tests/test_readout.py, so the shared `repro.readout` subsystem is
+provably a pure factoring — not a behaviour change.
+
+Run from the repo root (only to re-pin after an INTENDED numerical
+change, never to paper over an accidental one):
+
+    PYTHONPATH=src python tests/golden/gen_readout_golden.py
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cim import CIMConfig, cim_matmul, tile
+from repro.core import ADCConfig, CircuitCost, NoiseConfig, WVConfig, WVMethod
+from repro.core.cost import read_phase_cost
+from repro.core.wv import program_columns, verify_aggregate
+from repro.lifetime.refresh import flag_columns
+from repro.quant import QuantConfig, pack_columns, quantize_weight
+
+OUT = os.path.join(os.path.dirname(__file__), "readout_golden.npz")
+
+N = 16
+METHODS = list(WVMethod)
+
+
+def _cfg(method: WVMethod, **kw) -> WVConfig:
+    return WVConfig(
+        method=method,
+        n_cells=N,
+        adc=ADCConfig(bits=9),
+        tau_w=4.0 * N / 32.0,
+        noise=NoiseConfig(sigma_read_lsb=0.7, rho_cm=0.3),
+        max_fine_iters=25,
+        **kw,
+    )
+
+
+def main() -> None:
+    out: dict[str, np.ndarray] = {}
+    tkey = jax.random.PRNGKey(0)
+    targets = jax.random.randint(tkey, (12, N), 0, 8).astype(jnp.float32)
+    g_free = targets + 0.4 * jax.random.normal(jax.random.PRNGKey(1), targets.shape)
+
+    for m in METHODS:
+        cfg = _cfg(m)
+        # Full programming run (exercises the WV loop's whole key schedule).
+        g, stats = jax.jit(lambda k, t: program_columns(k, t, cfg))(
+            jax.random.PRNGKey(42), targets
+        )
+        out[f"prog_g_{m.value}"] = np.asarray(g)
+        out[f"prog_energy_{m.value}"] = np.asarray(stats.energy_pj)
+        out[f"prog_latency_{m.value}"] = np.asarray(stats.latency_ns)
+        out[f"prog_reads_{m.value}"] = np.asarray(stats.reads)
+        # One verify sweep on a free-floating state (pre-threshold outputs).
+        agg, mag, ncmp, thr = verify_aggregate(
+            jax.random.PRNGKey(5), g_free, targets, cfg
+        )
+        out[f"agg_{m.value}"] = np.asarray(agg)
+        out[f"mag_{m.value}"] = np.asarray(mag)
+        out[f"ncmp_{m.value}"] = np.asarray(ncmp)
+        out[f"thr_{m.value}"] = np.asarray(thr, np.float32)
+        # Per-column sub-stream (bucketed pipeline) RNG policy.
+        col_ids = 100 + jnp.arange(targets.shape[0], dtype=jnp.int32)
+        g_c, _ = jax.jit(
+            lambda k, t, i: program_columns(k, t, cfg, col_ids=i)
+        )(jax.random.PRNGKey(42), targets, col_ids)
+        out[f"prog_g_colids_{m.value}"] = np.asarray(g_c)
+        # Read-phase cost constants.
+        lat, en = read_phase_cost(cfg, CircuitCost())
+        out[f"cost_lat_{m.value}"] = np.asarray(lat)
+        out[f"cost_en_{m.value}"] = np.asarray(en)
+
+    # Fused Pallas in-loop path (HARP + HD-PV cover ternary & magnitude).
+    for m in (WVMethod.HARP, WVMethod.HD_PV):
+        cfg = _cfg(m, use_pallas=True)
+        g, _ = jax.jit(lambda k, t: program_columns(k, t, cfg))(
+            jax.random.PRNGKey(42), targets
+        )
+        out[f"prog_g_pallas_{m.value}"] = np.asarray(g)
+
+    # Refresh: voted drift detection on a partially-drifted state.
+    drift = jnp.zeros_like(targets).at[2].add(1.6).at[7, 3].add(-2.0)
+    g_drift = targets + drift
+    for m in (WVMethod.HARP, WVMethod.HD_PV, WVMethod.CW_SC):
+        flagged, sweeps = flag_columns(
+            jax.random.PRNGKey(9), g_drift, targets, _cfg(m)
+        )
+        out[f"flag_{m.value}"] = np.asarray(flagged)
+        out[f"flag_sweeps_{m.value}"] = np.asarray(sweeps)
+
+    # CIM analog matmul through macro tiles (noisy + quantized converters).
+    w = jax.random.normal(jax.random.PRNGKey(3), (24, 8), jnp.float32)
+    q, scale = quantize_weight(w, QuantConfig(weight_bits=6, cell_bits=3))
+    cols, layout = pack_columns(q, N, 3, 2)
+    g_cells = cols.astype(jnp.float32) + 0.2 * jax.random.normal(
+        jax.random.PRNGKey(4), cols.shape
+    )
+
+    class _State:
+        pass
+
+    st = _State()
+    st.g, st.layout, st.shape, st.scale = g_cells, layout, w.shape, scale
+    cim_cfg = CIMConfig(
+        macro_rows=16, dac_bits=5, adc_bits=9, sigma_read_lsb=0.4
+    )
+    cw = tile.build_weight(st, cim_cfg, jax.random.PRNGKey(7), "leaf")
+    x = jax.random.normal(jax.random.PRNGKey(8), (5, 24), jnp.float32)
+    out["cim_y"] = np.asarray(cim_matmul(x, cw))
+    out["cim_y_ideal"] = np.asarray(
+        cim_matmul(x, tile.build_weight(
+            st, CIMConfig(dac_bits=None, adc_bits=None, sigma_read_lsb=0.0,
+                          macro_rows=16),
+            jax.random.PRNGKey(7), "leaf",
+        ))
+    )
+
+    np.savez_compressed(OUT, **out)
+    print(f"wrote {OUT}: {len(out)} arrays")
+
+
+if __name__ == "__main__":
+    main()

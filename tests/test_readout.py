@@ -1,0 +1,315 @@
+"""Unified readout subsystem: converter edge cases, averaging physics,
+offset calibration, and bit-identity of the refactored WV / refresh /
+CIM read paths against pre-refactor goldens.
+
+The golden archive (tests/golden/readout_golden.npz) was captured from
+the tree BEFORE the read path was extracted into `repro.readout`
+(generator: tests/golden/gen_readout_golden.py), so every
+`assert_array_equal` below proves the refactor is a pure factoring of
+the three previously-divergent read-path implementations.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cim import CIMConfig, cim_matmul, tile
+from repro.core import ADCConfig, CircuitCost, NoiseConfig, WVConfig, WVMethod
+from repro.core.cost import read_phase_cost
+from repro.core.wv import program_columns, verify_aggregate
+from repro.lifetime.refresh import flag_columns
+from repro.quant import QuantConfig, pack_columns, quantize_weight
+from repro.readout import (
+    Converter,
+    ReadoutBasis,
+    ReadoutConfig,
+    calibrate_offsets,
+    compare_read,
+    decode_magnitude,
+    for_wv_method,
+    full_scale_lsb,
+    read_columns,
+    sample_col_offsets,
+    sar_quantize,
+    sar_read,
+    sweep_cost,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "readout_golden.npz")
+N = 16
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+def _cfg(method: WVMethod, **kw) -> WVConfig:
+    # Must mirror tests/golden/gen_readout_golden.py exactly.
+    return WVConfig(
+        method=method,
+        n_cells=N,
+        adc=ADCConfig(bits=9),
+        tau_w=4.0 * N / 32.0,
+        noise=NoiseConfig(sigma_read_lsb=0.7, rho_cm=0.3),
+        max_fine_iters=25,
+        **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def targets():
+    return jax.random.randint(jax.random.PRNGKey(0), (12, N), 0, 8).astype(
+        jnp.float32
+    )
+
+
+# ---------------------------------------------------- golden bit-identity
+@pytest.mark.parametrize("method", list(WVMethod))
+def test_programming_bit_identical_to_pre_refactor(golden, targets, method):
+    cfg = _cfg(method)
+    g, stats = jax.jit(lambda k, t: program_columns(k, t, cfg))(
+        jax.random.PRNGKey(42), targets
+    )
+    np.testing.assert_array_equal(np.asarray(g), golden[f"prog_g_{method.value}"])
+    np.testing.assert_array_equal(
+        np.asarray(stats.energy_pj), golden[f"prog_energy_{method.value}"]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(stats.latency_ns), golden[f"prog_latency_{method.value}"]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(stats.reads), golden[f"prog_reads_{method.value}"]
+    )
+
+
+@pytest.mark.parametrize("method", list(WVMethod))
+def test_colid_substream_bit_identical_to_pre_refactor(golden, targets, method):
+    cfg = _cfg(method)
+    col_ids = 100 + jnp.arange(targets.shape[0], dtype=jnp.int32)
+    g, _ = jax.jit(lambda k, t, i: program_columns(k, t, cfg, col_ids=i))(
+        jax.random.PRNGKey(42), targets, col_ids
+    )
+    np.testing.assert_array_equal(
+        np.asarray(g), golden[f"prog_g_colids_{method.value}"]
+    )
+
+
+@pytest.mark.parametrize("method", list(WVMethod))
+def test_verify_aggregate_bit_identical_to_pre_refactor(golden, targets, method):
+    g_free = targets + 0.4 * jax.random.normal(
+        jax.random.PRNGKey(1), targets.shape
+    )
+    agg, mag, ncmp, thr = verify_aggregate(
+        jax.random.PRNGKey(5), g_free, targets, _cfg(method)
+    )
+    np.testing.assert_array_equal(np.asarray(agg), golden[f"agg_{method.value}"])
+    np.testing.assert_array_equal(np.asarray(mag), golden[f"mag_{method.value}"])
+    np.testing.assert_array_equal(np.asarray(ncmp), golden[f"ncmp_{method.value}"])
+    assert np.float32(thr) == golden[f"thr_{method.value}"]
+
+
+@pytest.mark.parametrize("method", [WVMethod.HARP, WVMethod.HD_PV])
+def test_fused_pallas_loop_bit_identical_to_pre_refactor(golden, targets, method):
+    cfg = _cfg(method, use_pallas=True)
+    g, _ = jax.jit(lambda k, t: program_columns(k, t, cfg))(
+        jax.random.PRNGKey(42), targets
+    )
+    np.testing.assert_array_equal(
+        np.asarray(g), golden[f"prog_g_pallas_{method.value}"]
+    )
+
+
+@pytest.mark.parametrize(
+    "method", [WVMethod.HARP, WVMethod.HD_PV, WVMethod.CW_SC]
+)
+def test_refresh_flagging_bit_identical_to_pre_refactor(golden, targets, method):
+    drift = jnp.zeros_like(targets).at[2].add(1.6).at[7, 3].add(-2.0)
+    flagged, sweeps = flag_columns(
+        jax.random.PRNGKey(9), targets + drift, targets, _cfg(method)
+    )
+    np.testing.assert_array_equal(np.asarray(flagged), golden[f"flag_{method.value}"])
+    assert sweeps == int(golden[f"flag_sweeps_{method.value}"])
+
+
+@pytest.mark.parametrize("method", list(WVMethod))
+def test_read_cost_bit_identical_to_pre_refactor(golden, method):
+    lat, en = read_phase_cost(_cfg(method), CircuitCost())
+    np.testing.assert_array_equal(np.asarray(lat), golden[f"cost_lat_{method.value}"])
+    np.testing.assert_array_equal(np.asarray(en), golden[f"cost_en_{method.value}"])
+
+
+def _cim_weight(cim_cfg):
+    w = jax.random.normal(jax.random.PRNGKey(3), (24, 8), jnp.float32)
+    q, scale = quantize_weight(w, QuantConfig(weight_bits=6, cell_bits=3))
+    cols, layout = pack_columns(q, N, 3, 2)
+    g_cells = cols.astype(jnp.float32) + 0.2 * jax.random.normal(
+        jax.random.PRNGKey(4), cols.shape
+    )
+
+    class _State:
+        pass
+
+    st = _State()
+    st.g, st.layout, st.shape, st.scale = g_cells, layout, w.shape, scale
+    return tile.build_weight(st, cim_cfg, jax.random.PRNGKey(7), "leaf")
+
+
+def test_cim_matmul_bit_identical_to_pre_refactor(golden):
+    x = jax.random.normal(jax.random.PRNGKey(8), (5, 24), jnp.float32)
+    cw = _cim_weight(
+        CIMConfig(macro_rows=16, dac_bits=5, adc_bits=9, sigma_read_lsb=0.4)
+    )
+    np.testing.assert_array_equal(np.asarray(cim_matmul(x, cw)), golden["cim_y"])
+    cw_ideal = _cim_weight(
+        CIMConfig(macro_rows=16, dac_bits=None, adc_bits=None, sigma_read_lsb=0.0)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(cim_matmul(x, cw_ideal)), golden["cim_y_ideal"]
+    )
+
+
+# ------------------------------------------------- converter edge cases
+def test_sar_clips_at_both_rails():
+    adc = ADCConfig(bits=9)
+    fs = full_scale_lsb(N, 8)
+    # Uncentered range [0, FS]: rails at 0 and FS.
+    y = jnp.asarray([-1e6, -0.1, 0.0, fs, fs + 0.1, 1e6])
+    out = sar_read(y, adc, N, 8, centered=False)
+    assert float(out[0]) == 0.0 and float(out[1]) == 0.0
+    assert float(out[-1]) == pytest.approx(fs, abs=fs / (1 << 9))
+    assert float(jnp.max(out)) <= fs
+    # Centered range [-FS/2, FS/2].
+    out_c = sar_read(jnp.asarray([-1e6, 1e6]), adc, N, 8, centered=True)
+    assert float(out_c[0]) == -fs / 2.0
+    assert float(out_c[1]) == pytest.approx(fs / 2.0, abs=fs / (1 << 9))
+    assert float(out_c[1]) <= fs / 2.0
+
+
+def test_sar_one_bit_converter():
+    # bits=1 leaves exactly two codes: {lo, lo + FS/2}.
+    out = sar_quantize(jnp.linspace(-60.0, 60.0, 101), 1, 112.0, centered=True)
+    assert set(np.unique(np.asarray(out))) == {-56.0, 0.0}
+
+
+def test_compare_deadzone_thresholds():
+    t = jnp.zeros((5,))
+    y = jnp.asarray([-0.51, -0.5, 0.0, 0.5, 0.51])
+    sign, n_cmp = compare_read(y, t, deadzone_lsb=0.5)
+    np.testing.assert_array_equal(np.asarray(sign), [-1.0, 0.0, 0.0, 0.0, 1.0])
+    # Fig. 7(c): 'below' resolves in 1 comparison, everything else takes 2.
+    np.testing.assert_array_equal(np.asarray(n_cmp), [1, 2, 2, 2, 2])
+
+
+def test_mra_averaging_variance_scales_inverse_m():
+    """Uncorrelated read noise averages ~1/M; common mode does not."""
+    c = 4096
+    g = jnp.zeros((c, 4))
+    base = ReadoutConfig(
+        basis=ReadoutBasis.ONE_HOT, converter=Converter.IDEAL, n_cells=4,
+        noise=NoiseConfig(sigma_read_lsb=1.0, rho_cm=0.0),
+    )
+    key = jax.random.PRNGKey(11)
+    var = {}
+    for m in (1, 8):
+        res = read_columns(key, g, base.replace(avg_reads=m))
+        var[m] = float(jnp.var(res.values))
+        assert res.n_reads == m * 4
+    assert var[1] / var[8] == pytest.approx(8.0, rel=0.25)
+
+    cm = base.replace(noise=NoiseConfig(sigma_read_lsb=1.0, rho_cm=1.0))
+    v1 = float(jnp.var(read_columns(key, g, cm.replace(avg_reads=1)).values))
+    v8 = float(jnp.var(read_columns(key, g, cm.replace(avg_reads=8)).values))
+    assert v1 / v8 == pytest.approx(1.0, rel=0.1)
+
+
+# ----------------------------------------- offset drift and calibration
+def test_one_hot_reads_shift_by_col_offset_hadamard_decode_cancels():
+    c = 8
+    g = jnp.full((c, N), 3.0)
+    offs = jnp.full((c,), 2.0)
+    quiet = NoiseConfig(sigma_read_lsb=0.0)
+    oh = ReadoutConfig(
+        basis=ReadoutBasis.ONE_HOT, converter=Converter.SAR, n_cells=N,
+        noise=quiet,
+    )
+    vals = read_columns(jax.random.PRNGKey(0), g, oh, col_offset=offs).values
+    # Every one-hot measurement eats the offset as a systematic error.
+    assert float(jnp.min(vals)) > 4.5
+    hd_cfg = oh.replace(basis=ReadoutBasis.HADAMARD)
+    res = read_columns(jax.random.PRNGKey(0), g, hd_cfg, col_offset=offs)
+    w_hat = decode_magnitude(res.values, hd_cfg)
+    # Balanced rows cancel a measurement-constant offset at decode
+    # (eq. 7): cells 1..N-1 are clean, cell 0 absorbs it.
+    np.testing.assert_allclose(np.asarray(w_hat[:, 1:]), 3.0, atol=0.25)
+
+
+def test_calibration_trims_static_offsets():
+    c = 512
+    cfg = ReadoutConfig(
+        basis=ReadoutBasis.ONE_HOT, converter=Converter.SAR, n_cells=N,
+        noise=NoiseConfig(sigma_read_lsb=0.7, rho_cm=0.3),
+        sigma_col_offset_lsb=1.5,
+    )
+    offs = sample_col_offsets(jax.random.PRNGKey(1), c, cfg)
+    assert float(jnp.std(offs)) == pytest.approx(1.5, rel=0.15)
+    residual = calibrate_offsets(jax.random.PRNGKey(2), offs, cfg, k_reads=16)
+    assert float(jnp.std(residual)) < 0.35 * float(jnp.std(offs))
+    # More calibration reads -> tighter trim.
+    res_2 = calibrate_offsets(jax.random.PRNGKey(2), offs, cfg, k_reads=2)
+    assert float(jnp.std(residual)) < float(jnp.std(res_2))
+
+
+def test_offset_degrades_onehot_programming_and_calibration_recovers():
+    """End-to-end reference-tuning scenario through the WV engine."""
+    tgt = jax.random.randint(jax.random.PRNGKey(3), (48, N), 0, 8).astype(
+        jnp.float32
+    )
+    cfg = _cfg(WVMethod.MRA)
+    rcfg = for_wv_method(cfg).replace(sigma_col_offset_lsb=1.5)
+    offs = sample_col_offsets(jax.random.PRNGKey(4), tgt.shape[0], rcfg)
+    trimmed = calibrate_offsets(jax.random.PRNGKey(5), offs, rcfg, k_reads=8)
+
+    def rms(col_offset):
+        _, st = jax.jit(
+            lambda k, t: program_columns(k, t, cfg, col_offset=col_offset)
+        )(jax.random.PRNGKey(6), tgt)
+        return float(jnp.mean(st.rms_error_lsb))
+
+    clean, drifted, calibrated = rms(None), rms(offs), rms(trimmed)
+    assert drifted > 1.5 * clean          # offsets poison one-hot verify
+    assert calibrated < 0.5 * drifted     # reference tuning recovers it
+    assert calibrated < 1.3 * clean
+
+
+def test_compare_converter_rejects_averaging():
+    with pytest.raises(ValueError, match="one-shot"):
+        ReadoutConfig(converter=Converter.COMPARE, avg_reads=4)
+
+
+def test_refresh_with_zero_sweeps_flags_nothing(targets):
+    from repro.lifetime.refresh import RefreshConfig
+
+    flagged, sweeps = flag_columns(
+        jax.random.PRNGKey(0), targets + 2.0, targets, _cfg(WVMethod.HARP),
+        RefreshConfig(verify_sweeps=0),
+    )
+    assert sweeps == 0 and not bool(jnp.any(flagged))
+
+
+# ------------------------------------------------------- shared pricing
+def test_sweep_cost_matrix_matches_method_wrappers():
+    cfg = _cfg(WVMethod.MRA)
+    rcfg = for_wv_method(cfg)
+    assert rcfg.basis == ReadoutBasis.ONE_HOT
+    assert rcfg.converter == Converter.SAR
+    assert rcfg.avg_reads == cfg.mra_reads
+    lat_w, en_w = read_phase_cost(cfg, CircuitCost())
+    lat_r, en_r = sweep_cost(rcfg, CircuitCost())
+    assert float(lat_w) == float(lat_r) and float(en_w) == float(en_r)
+    # IDEAL is priced as SAR: idealized sweeps are never free.
+    lat_i, en_i = sweep_cost(rcfg.replace(converter=Converter.IDEAL), CircuitCost())
+    assert float(lat_i) == float(lat_r) and float(en_i) == float(en_r)
