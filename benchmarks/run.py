@@ -1,56 +1,101 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 #
-# Each registered benchmark runs in sequence; a benchmark that raises
-# aborts the run LOUDLY — full traceback to stderr and a non-zero exit —
-# so CI and sweep drivers can never mistake a half-finished run for a
-# passing one.
+# The registry is declarative and LAZY: ``--list`` and unknown-name
+# errors never import jax (or any benchmark module), so sweep drivers
+# and the tier-1 registry smoke test stay fast.  Each registered
+# benchmark runs in sequence; a benchmark that raises aborts the run
+# LOUDLY — full traceback to stderr and a non-zero exit — so CI and
+# sweep drivers can never mistake a half-finished run for a passing one.
+#
+#   python -m benchmarks.run                      # run everything
+#   python -m benchmarks.run --list               # names only, no imports
+#   python -m benchmarks.run serving.traffic --quick
 from __future__ import annotations
 
+import argparse
+import importlib
 import sys
 import time
 import traceback
 
+# (name, module under benchmarks/, attribute, kwargs)
+REGISTRY: list[tuple[str, str, str, dict]] = [
+    ("fig9.tau_sweep", "fig9_convergence", "main", {"sweep_tau": True}),
+    ("fig9.convergence", "fig9_convergence", "convergence_curves", {}),
+    ("fig9.n_scaling", "fig9_convergence", "n_scaling", {}),
+    ("fig9c.common_mode", "fig9c_common_mode", "main", {}),
+    ("fig10.robustness", "fig10_robustness", "main", {}),
+    ("fig11.iso_footprint_64", "fig10_robustness", "main_fig11", {}),
+    ("fig12.iso_footprint", "fig12_iso_footprint", "main", {}),
+    ("fig13.latency_energy_32", "fig13_latency_energy", "main", {"n_cells": 32}),
+    ("fig13.latency_energy_64", "fig13_latency_energy", "main", {"n_cells": 64}),
+    ("table2.prior_work", "table2_prior_work", "main", {}),
+    ("retention.refresh", "retention_refresh", "main", {}),
+    ("kernels.bench", "kernels_bench", "main", {}),
+    ("deploy.throughput", "deploy_throughput", "main", {}),
+    ("cim.inference", "cim_inference", "main", {}),
+    ("readout.sweep", "readout_sweep", "main", {}),
+    ("serving.traffic", "serving_traffic", "main", {}),
+]
 
-def _registry():
-    from . import (
-        cim_inference,
-        deploy_throughput,
-        fig9_convergence,
-        fig9c_common_mode,
-        fig10_robustness,
-        fig12_iso_footprint,
-        fig13_latency_energy,
-        kernels_bench,
-        readout_sweep,
-        retention_refresh,
-        table2_prior_work,
-    )
-
-    return [
-        ("fig9.tau_sweep", lambda: fig9_convergence.main(sweep_tau=True)),
-        ("fig9.convergence", fig9_convergence.convergence_curves),
-        ("fig9.n_scaling", fig9_convergence.n_scaling),
-        ("fig9c.common_mode", fig9c_common_mode.main),
-        ("fig10.robustness", fig10_robustness.main),
-        ("fig11.iso_footprint_64", fig10_robustness.main_fig11),
-        ("fig12.iso_footprint", fig12_iso_footprint.main),
-        ("fig13.latency_energy_32", lambda: fig13_latency_energy.main(32)),
-        ("fig13.latency_energy_64", lambda: fig13_latency_energy.main(64)),
-        ("table2.prior_work", table2_prior_work.main),
-        ("retention.refresh", retention_refresh.main),
-        ("kernels.bench", kernels_bench.main),
-        ("deploy.throughput", deploy_throughput.main),
-        ("cim.inference", cim_inference.main),
-        ("readout.sweep", readout_sweep.main),
-    ]
+# Benchmarks whose entry accepts quick=True (CI smoke mode).
+QUICK_CAPABLE = {
+    "deploy.throughput",
+    "cim.inference",
+    "readout.sweep",
+    "serving.traffic",
+}
 
 
-def main() -> None:
+def names() -> list[str]:
+    return [name for name, _, _, _ in REGISTRY]
+
+
+def _resolve(module: str, attr: str):
+    pkg = __package__ or "benchmarks"
+    return getattr(importlib.import_module(f"{pkg}.{module}"), attr)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("benchmarks", nargs="*", metavar="NAME",
+                    help="benchmark names to run (default: all)")
+    ap.add_argument("--list", action="store_true", help="print names and exit")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode (quick-capable benchmarks only)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for n in names():
+            tag = " [quick]" if n in QUICK_CAPABLE else ""
+            print(f"{n}{tag}")
+        return
+
+    selected = REGISTRY
+    if args.benchmarks:
+        by_name = {entry[0]: entry for entry in REGISTRY}
+        unknown = [n for n in args.benchmarks if n not in by_name]
+        if unknown:
+            print(
+                f"unknown benchmark(s): {', '.join(unknown)}; "
+                f"known: {', '.join(names())}",
+                file=sys.stderr,
+            )
+            sys.exit(2)
+        selected = [by_name[n] for n in args.benchmarks]
+    if args.quick:
+        bad = [n for n, _, _, _ in selected if n not in QUICK_CAPABLE]
+        if args.benchmarks and bad:
+            print(f"not quick-capable: {', '.join(bad)}", file=sys.stderr)
+            sys.exit(2)
+        selected = [e for e in selected if e[0] in QUICK_CAPABLE]
+
     t0 = time.time()
     print("name,us_per_call,derived")
-    for name, fn in _registry():
+    for name, module, attr, kwargs in selected:
+        kw = dict(kwargs, quick=True) if args.quick else kwargs
         try:
-            fn()
+            _resolve(module, attr)(**kw)
         except Exception:
             traceback.print_exc()
             print(

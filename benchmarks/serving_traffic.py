@@ -1,0 +1,216 @@
+"""Continuous-batching serving under Poisson offered load (BENCH_serving).
+
+Drives the `ContinuousScheduler` (DESIGN.md Sec. 13) with Poisson
+arrival streams of variable-length requests at increasing offered load
+and records throughput (tokens/sec, tokens/step) and request latency
+(p50/p99, in decode steps and seconds) for BOTH serving paths:
+
+* digital — HARP-programmed weights materialized to dense matmuls;
+* analog  — the same deployment served compute-in-memory through the
+  `CIMExecutor` (bit-serial DAC -> tile VMM -> per-slice ADC), with the
+  executor's read-disturb traffic draining into a `LifetimeSimulator`
+  whose incremental scrub interleaves between decode steps.
+
+Two scheduler contracts are HARD-ASSERTED on every run (CI quick smoke):
+
+* zero retraces after warmup — `trace_counts` stays flat across every
+  load point and batch composition;
+* exactly one device->host sync per decode step — `host_syncs ==
+  decode_steps`.
+
+Full mode commits BENCH_serving.json; `--quick` writes the (gitignored)
+BENCH_serving_quick.json and shrinks the model/stream for CI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.cim import CIMConfig, CIMExecutor
+from repro.core import WVConfig, WVMethod
+from repro.core.programmer import deploy_arrays
+from repro.lifetime import LifetimeSimulator
+from repro.lifetime.refresh import RefreshConfig, RefreshPolicy
+from repro.models import ModelConfig, init_params
+from repro.serving import ContinuousScheduler, ServeEngine, poisson_requests
+
+from .common import emit
+
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_serving.json")
+OUT_QUICK = os.path.join(os.path.dirname(__file__), "BENCH_serving_quick.json")
+
+
+def _model_cfg(quick: bool) -> ModelConfig:
+    return ModelConfig(
+        name="serve-bench",
+        n_layers=2,
+        d_model=32 if quick else 64,
+        n_heads=2,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=64 if quick else 128,
+        vocab_size=64 if quick else 128,
+        dtype=jnp.float32,
+        attn_chunk_q=16,
+        attn_chunk_kv=16,
+        remat=False,
+        tie_embeddings=False,
+    )
+
+
+def _serve_loads(
+    engine: ServeEngine,
+    *,
+    n_slots: int,
+    max_len: int,
+    loads: list[float],
+    n_requests: int,
+    prompt_lens: tuple[int, int],
+    max_new: tuple[int, int],
+    maintenance_fn=None,
+    maintenance_every: int = 0,
+) -> tuple[list[dict], dict]:
+    sched = ContinuousScheduler(
+        engine, n_slots=n_slots, max_len=max_len, key=jax.random.PRNGKey(9),
+        maintenance_fn=maintenance_fn, maintenance_every=maintenance_every,
+    )
+    sched.warmup(prompt_range=prompt_lens)
+    warm = dict(sched.trace_counts)
+    rows = []
+    for load in loads:
+        sched.reset(keep_traces=True)
+        reqs = poisson_requests(
+            17, n_requests, rate=load, vocab=engine.cfg.vocab_size,
+            prompt_lens=prompt_lens, max_new=max_new,
+        )
+        sched.run(reqs)
+        stats = sched.latency_stats()
+        # ---- scheduler contracts (hard-asserted, CI quick smoke) ----
+        retraces = {k: sched.trace_counts[k] - warm[k] for k in warm}
+        assert all(v == 0 for v in retraces.values()), (
+            f"retrace after warmup at load {load}: {retraces}"
+        )
+        assert sched.host_syncs == sched.decode_steps, (
+            sched.host_syncs, sched.decode_steps,
+        )
+        step_s = sched.wall_s / max(sched.decode_steps, 1)
+        rows.append(
+            {
+                "offered_load_req_per_step": load,
+                "step_us": round(step_s * 1e6, 1),
+                "completed": stats["completed"],
+                "tokens_per_step": round(stats["tokens_per_step"], 4),
+                "tokens_per_s": round(stats["tokens_per_s"], 2),
+                "p50_latency_steps": stats.get("p50_latency_steps", 0.0),
+                "p99_latency_steps": stats.get("p99_latency_steps", 0.0),
+                "p50_latency_s": round(
+                    stats.get("p50_latency_steps", 0.0) * step_s, 5
+                ),
+                "p99_latency_s": round(
+                    stats.get("p99_latency_steps", 0.0) * step_s, 5
+                ),
+                "p50_ttft_steps": stats.get("p50_ttft_steps", 0.0),
+                "mean_queue_delay_steps": round(
+                    stats.get("mean_queue_delay_steps", 0.0), 3
+                ),
+                "decode_steps": stats["decode_steps"],
+            }
+        )
+    counters = {
+        "retraces_after_warmup": 0,
+        "host_syncs_per_step": 1.0,
+        "warm_traces": warm,
+    }
+    return rows, counters
+
+
+def main(quick: bool = False) -> dict:
+    cfg = _model_cfg(quick)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_slots = 4 if quick else 8
+    max_len = 64 if quick else 96
+    loads = [0.1, 0.4] if quick else [0.1, 0.3, 0.8]
+    n_requests = 8 if quick else 24
+    prompt_lens = (3, 14)
+    max_new = (3, 8) if quick else (4, 12)
+
+    # ---------------- program the deployment once (shared by both paths)
+    wv = WVConfig(method=WVMethod.HARP, max_fine_iters=12, max_coarse_iters=4)
+    deployed, report = deploy_arrays(jax.random.PRNGKey(1), params, wv)
+
+    # ---------------- digital: materialized dense weights
+    digital = ServeEngine(cfg, deployed.materialize(), temperature=0.7)
+    rows_d, counters_d = _serve_loads(
+        digital, n_slots=n_slots, max_len=max_len, loads=loads,
+        n_requests=n_requests, prompt_lens=prompt_lens, max_new=max_new,
+    )
+
+    # ---------------- analog: CIM executor + interleaved lifetime scrub
+    executor = CIMExecutor(
+        deployed,
+        CIMConfig(dac_bits=4, adc_bits=10, sigma_read_lsb=0.2),
+        jax.random.PRNGKey(7),
+    )
+    analog = ServeEngine(cfg, executor=executor, temperature=0.7)
+    sim = LifetimeSimulator(
+        jax.random.PRNGKey(3), deployed,
+        refresh_cfg=RefreshConfig(policy=RefreshPolicy.VERIFY_TRIGGERED),
+        traffic_fn=executor.drain_reads,
+    )
+    rows_a, counters_a = _serve_loads(
+        analog, n_slots=n_slots, max_len=max_len, loads=loads,
+        n_requests=n_requests, prompt_lens=prompt_lens, max_new=max_new,
+        maintenance_fn=lambda: sim.step_epoch(1.0, max_leaves=2),
+        maintenance_every=8,
+    )
+    lat_ns, e_pj = executor.token_cost()
+
+    for tag, rows in (("digital", rows_d), ("analog", rows_a)):
+        for r in rows:
+            emit(
+                f"serving.{tag}.load{r['offered_load_req_per_step']}",
+                r["step_us"],
+                f"tok/s={r['tokens_per_s']};p99={r['p99_latency_steps']}steps",
+            )
+
+    out = {
+        "config": {
+            "quick": quick,
+            "model": cfg.name,
+            "n_slots": n_slots,
+            "max_len": max_len,
+            "n_requests": n_requests,
+            "prompt_lens": list(prompt_lens),
+            "max_new": list(max_new),
+            "wv_method": "HARP",
+            "rms_cell_error_lsb": round(float(report.rms_cell_error_lsb), 4),
+        },
+        "digital": {"loads": rows_d, "counters": counters_d},
+        "analog": {
+            "loads": rows_a,
+            "counters": counters_a,
+            "token_latency_ns": round(lat_ns, 1),
+            "token_energy_pj": round(e_pj, 1),
+            "lifetime_epochs": sim.epoch,
+        },
+    }
+    path = OUT_QUICK if quick else OUT
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    top_d = rows_d[-1]["tokens_per_s"]
+    top_a = rows_a[-1]["tokens_per_s"]
+    emit(
+        "serving.traffic",
+        0.0,
+        f"digital={top_d}tok/s;analog={top_a}tok/s;retraces=0;json={os.path.basename(path)}",
+    )
+    return out
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

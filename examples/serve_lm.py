@@ -14,6 +14,11 @@ runs batched greedy generation, and reports tokens/s.  Two RRAM modes:
             bit-serial DAC -> analog VMM -> per-slice ADC path, with
             per-read noise, and the cost model's inference phase prices
             every token (repro.cim, DESIGN.md Sec. 11).
+
+`--continuous` swaps the fixed-batch generate loop for the
+continuous-batching scheduler (DESIGN.md Sec. 13): a Poisson stream of
+variable-length requests is admitted into a fixed decode batch with
+zero retraces after warmup, and per-request latency is reported.
 """
 
 import argparse
@@ -42,6 +47,12 @@ def main():
     ap.add_argument("--read-noise", type=float, default=0.2,
                     help="per-read TIA/ADC noise std, cell-LSB")
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a Poisson request stream via the scheduler")
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--load", type=float, default=0.3,
+                    help="offered load, requests per decode step")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -81,6 +92,38 @@ def main():
               f"rms={report.rms_cell_error_lsb:.3f} LSB")
 
     engine = ServeEngine(cfg, params, executor=executor)
+
+    if args.continuous:
+        from repro.serving import ContinuousScheduler, poisson_requests
+
+        max_len = args.prompt_len + args.max_new + 8
+        sched = ContinuousScheduler(
+            engine, n_slots=args.n_slots, max_len=max_len,
+            key=jax.random.PRNGKey(11),
+        )
+        lo, hi = max(args.prompt_len // 2, 2), args.prompt_len
+        print(f"warming prefill buckets for prompts in [{lo}, {hi}] ...")
+        sched.warmup(prompt_range=(lo, hi))
+        reqs = poisson_requests(
+            3, args.requests, rate=args.load, vocab=cfg.vocab_size,
+            prompt_lens=(lo, hi), max_new=(args.max_new // 2, args.max_new),
+        )
+        recs = sched.run(reqs)
+        s = sched.latency_stats()
+        print(f"served {len(recs)} requests in {sched.decode_steps} decode "
+              f"steps ({s['tokens_per_s']:.1f} tok/s, "
+              f"{s['tokens_per_step']:.2f} tok/step)")
+        print(f"latency p50={s['p50_latency_steps']:.1f} "
+              f"p99={s['p99_latency_steps']:.1f} steps; "
+              f"ttft p50={s['p50_ttft_steps']:.1f} steps")
+        print(f"retraces after warmup: admit={sched.trace_counts['admit']} "
+              f"decode={sched.trace_counts['decode']} (counts incl. warmup)")
+        if executor is not None:
+            lat_ns, e_pj = executor.token_cost()
+            print(f"analog cost model: {lat_ns / 1e3:.2f} us/token, "
+                  f"{e_pj / 1e3:.1f} nJ/token")
+        return
+
     prompts = jax.random.randint(
         jax.random.PRNGKey(2), (args.batch, args.prompt_len), 0, cfg.vocab_size
     )

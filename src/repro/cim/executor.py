@@ -70,6 +70,9 @@ class CIMExecutor:
         sub-stream (`fold_in(key, access)`), every leaf folds its uid,
         every stacked layer its index (tile.rekey).
       predicate: overrides `analog_eligible`.
+      mesh: optional device mesh; tile planes shard their output-channel
+        axis over "model" (`launch.shardings.cim_weight_specs`) so the
+        analog TP layout matches the dense serving layout.
     """
 
     def __init__(
@@ -78,10 +81,12 @@ class CIMExecutor:
         cfg: CIMConfig | None = None,
         key: jax.Array | None = None,
         predicate: Callable[[str, Any], bool] | None = None,
+        mesh: Any = None,
     ):
         self.deployed = deployed
         self.cfg = cfg or CIMConfig()
         self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.mesh = mesh
         self.access = 0
         self.tokens_served = 0
         predicate = predicate or analog_eligible
@@ -106,7 +111,14 @@ class CIMExecutor:
         return jax.random.fold_in(k, self._uids[name])
 
     def _tile(self, name: str, state) -> CIMWeight:
-        return build_weight(state, self.cfg, self._leaf_key(name), name=name)
+        w = build_weight(state, self.cfg, self._leaf_key(name), name=name)
+        if self.mesh is not None:
+            # Lazy import: launch sits above cim in the layering; the
+            # executor only touches it when a mesh is actually supplied.
+            from repro.launch.shardings import shard_cim_weight
+
+            w = shard_cim_weight(self.mesh, w)
+        return w
 
     def _refresh_views(self) -> None:
         """Re-view any array whose conductances were swapped (drift/refresh)."""

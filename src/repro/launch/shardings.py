@@ -118,6 +118,38 @@ def cache_sharding(mesh: Mesh, cache_tree: Any, cfg: ModelConfig, global_batch: 
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def cim_weight_specs(mesh: Mesh, w: Any) -> dict[str, NamedSharding]:
+    """Sharding for one `cim.CIMWeight`'s children (analog serving TP).
+
+    Tile planes g_pos/g_neg ([L,] T, S, R, M) and the dequant scale
+    ([L,] M) shard their output-channel axis M over "model" — the same
+    TP assignment the dense (L, din, dout) projections use, so the
+    analog forward's per-slice ADC readouts stay local to the shard
+    that consumes them.  Noise keys are replicated (a few bytes).
+    Non-divisible M falls back to replicated via `_sanitize`.
+    """
+    def out_spec(arr):
+        spec = P(*([None] * (arr.ndim - 1)), "model")
+        return NamedSharding(mesh, _sanitize(mesh, spec, arr.shape))
+
+    return {
+        "g_pos": out_spec(w.g_pos),
+        "g_neg": out_spec(w.g_neg),
+        "scale": out_spec(w.scale),
+        "key": NamedSharding(mesh, P()),
+    }
+
+
+def shard_cim_weight(mesh: Mesh, w: Any) -> Any:
+    """device_put a `CIMWeight`'s children onto the mesh per the specs."""
+    import dataclasses
+
+    specs = cim_weight_specs(mesh, w)
+    return dataclasses.replace(
+        w, **{k: jax.device_put(getattr(w, k), s) for k, s in specs.items()}
+    )
+
+
 def state_sharding(mesh: Mesh, state_tree: Any, cfg: ModelConfig) -> Any:
     """TrainState sharding: params + AdamW m/v share the param rules."""
     from repro.distributed.sharding import shard_params_tree

@@ -121,6 +121,7 @@ class LifetimeSimulator:
         self.traffic_fn = traffic_fn
         self.t_s = 0.0
         self.epoch = 0
+        self._scrub_cursor = 0
         k = key
         self.states = {}
         for name, arr in deployed.arrays.items():
@@ -153,14 +154,37 @@ class LifetimeSimulator:
         dt_s: float,
         reads_per_column: float = 0.0,
         eval_fn: Callable[[Any], float] | None = None,
+        max_leaves: int | None = None,
     ) -> EpochRecord:
-        """Age by `dt_s`, refresh, re-materialize, evaluate."""
+        """Age by `dt_s`, refresh, re-materialize, evaluate.
+
+        `max_leaves` bounds the scrub to a rotating window of at most
+        that many leaves per epoch (aging always applies to every
+        leaf).  This is the incremental-maintenance mode the
+        continuous-batching scheduler interleaves between decode steps:
+        per-epoch verify/re-program work stays O(max_leaves) instead of
+        O(model), so serving never stalls on a whole-model scrub, and
+        the cursor guarantees every leaf is visited every
+        ceil(n_leaves / max_leaves) epochs.  Each leaf's RNG stream
+        depends only on (key, epoch, leaf index), so the window changes
+        no drawn value — only which leaves run their refresh.
+        """
         wv_cfg, cost = self.deployed.wv_cfg, self.deployed.cost
         flagged = reprogrammed = 0
         en_v = en_p = lat = pulses = 0.0
         traffic = self.traffic_fn() if self.traffic_fn is not None else {}
         applied_reads = []
-        for li, (name, st) in enumerate(sorted(self.states.items())):
+        names = sorted(self.states)
+        if max_leaves is not None and max_leaves <= 0:
+            chosen = set()  # a zero budget scrubs nothing (aging still runs)
+        elif max_leaves is not None and max_leaves < len(names):
+            start = self._scrub_cursor % len(names)
+            chosen = {names[(start + j) % len(names)] for j in range(max_leaves)}
+            self._scrub_cursor = (start + max_leaves) % len(names)
+        else:
+            chosen = set(names)
+        for li, name in enumerate(names):
+            st = self.states[name]
             k_adv, k_ref = jax.random.split(
                 jax.random.fold_in(jax.random.fold_in(self.key, self.epoch), li)
             )
@@ -169,18 +193,19 @@ class LifetimeSimulator:
             st = advance(
                 k_adv, st, dt_s, leaf_reads, wv_cfg.device, self.drift_cfg
             )
-            st, out = apply_refresh(
-                k_ref, st, self.deployed.arrays[name].targets, wv_cfg, cost,
-                self.drift_cfg, self.refresh_cfg, self.epoch,
-            )
+            if name in chosen:
+                st, out = apply_refresh(
+                    k_ref, st, self.deployed.arrays[name].targets, wv_cfg, cost,
+                    self.drift_cfg, self.refresh_cfg, self.epoch,
+                )
+                if out.flagged is not None:
+                    flagged += int(out.flagged.sum())
+                reprogrammed += out.n_reprogrammed
+                en_v += out.verify_energy_pj
+                en_p += out.program_energy_pj
+                lat = max(lat, out.maintenance_latency_ns)  # leaves in parallel
+                pulses += out.write_pulses
             self.states[name] = st
-            if out.flagged is not None:
-                flagged += int(out.flagged.sum())
-            reprogrammed += out.n_reprogrammed
-            en_v += out.verify_energy_pj
-            en_p += out.program_energy_pj
-            lat = max(lat, out.maintenance_latency_ns)  # leaves in parallel
-            pulses += out.write_pulses
 
         self.t_s += dt_s
         self.epoch += 1
@@ -218,6 +243,7 @@ class LifetimeSimulator:
         dt_s: float,
         reads_per_column: float = 0.0,
         eval_fn: Callable[[Any], float] | None = None,
+        max_leaves: int | None = None,
     ) -> LifetimeReport:
         """Step `epochs` fixed-size epochs; returns the full time series."""
         report = LifetimeReport(
@@ -225,5 +251,7 @@ class LifetimeSimulator:
             method=self.deployed.wv_cfg.method.value,
         )
         for _ in range(epochs):
-            report.records.append(self.step_epoch(dt_s, reads_per_column, eval_fn))
+            report.records.append(
+                self.step_epoch(dt_s, reads_per_column, eval_fn, max_leaves)
+            )
         return report

@@ -81,14 +81,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict[str, Any]:
 
 
 # --------------------------------------------------------------------------
-def prefill(params, batch: dict, cfg: ModelConfig, mesh=None, max_len: int | None = None):
+def prefill(
+    params,
+    batch: dict,
+    cfg: ModelConfig,
+    mesh=None,
+    max_len: int | None = None,
+    true_len: jax.Array | None = None,
+):
     """Run the full prompt, materialize caches sized to max_len.
-    Returns (last_logits, cache)."""
+    Returns (last_logits, cache).
+
+    `true_len` (B,) int32 supports right-padded prompts (the continuous-
+    batching scheduler pads every prompt to a fixed bucket length so
+    admission never retraces): the returned logits are gathered at each
+    sequence's true last token and `cache["pos"]` is set per sequence to
+    ``true_len - 1``.  Causal attention plus the decode-time pos mask
+    make the padding inert — positions >= true_len hold junk kv that no
+    later read ever attends.  Only valid for pure attention caches
+    (recurrent rwkv6/hymba states would absorb the padding tokens).
+    """
     tokens_or = batch.get("tokens", batch.get("embeds"))
     b, s = tokens_or.shape[:2]
     max_len = max_len or s
+    if true_len is not None and cfg.block in ("rwkv6", "hymba"):
+        raise ValueError(
+            f"padded prefill (true_len) is attention-only; got block={cfg.block}"
+        )
     logits, _aux, kv = forward(params, batch, cfg, mesh, collect_cache=True)
     cache = init_cache(cfg, b, max_len)
+    if true_len is not None:
+        if "cross_k" in cache:
+            raise ValueError("padded prefill does not support cross-attention caches")
+        if cfg.n_codebooks > 1:
+            raise ValueError("padded prefill does not support multi-codebook heads")
+        cache["pos"] = (true_len - 1).astype(jnp.int32)
+        last = jnp.take_along_axis(
+            logits, (true_len - 1)[:, None, None], axis=1
+        )[:, 0]
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], kv["k"], 0, axis=2
+        )
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], kv["v"], 0, axis=2
+        )
+        return last, cache
     cache["pos"] = jnp.full((b,), s - 1, jnp.int32)
 
     if cfg.block == "rwkv6":
@@ -126,6 +163,24 @@ def prefill(params, batch: dict, cfg: ModelConfig, mesh=None, max_len: int | Non
         cache["cross_k"] = jnp.stack(ks)
         cache["cross_v"] = jnp.stack(vs)
     return logits[:, -1], cache
+
+
+# --------------------------------------------------------------------------
+def write_cache_slot(shared: dict, single: dict, slot) -> dict:
+    """Insert a single-request cache (B=1, same max_len) into batch slot
+    `slot` of a pre-allocated decode cache.
+
+    Every cache leaf carries the batch on axis 1 (stacked (L, B, ...)
+    layouts) except "pos" (B,); `slot` may be a traced int32 scalar, so
+    admission into any slot reuses one compiled dispatch (the continuous-
+    batching scheduler's refill path).
+    """
+    out = dict(shared)
+    for name, dst in shared.items():
+        src = single[name].astype(dst.dtype)
+        axis = 0 if name == "pos" else 1
+        out[name] = jax.lax.dynamic_update_slice_in_dim(dst, src, slot, axis=axis)
+    return out
 
 
 # --------------------------------------------------------------------------

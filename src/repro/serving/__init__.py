@@ -1,1 +1,7 @@
 from .engine import ServeEngine, make_decode_step, make_prefill_step  # noqa: F401
+from .scheduler import (  # noqa: F401
+    ContinuousScheduler,
+    Request,
+    RequestRecord,
+    poisson_requests,
+)

@@ -63,11 +63,22 @@ class ServeEngine:
             make_decode_step(self.cfg, self.mesh, sample=self.temperature > 0)
         )
 
-    def _access_params(self, n_tokens: int) -> Any:
-        """Params for one engine access of `n_tokens` batch tokens."""
+    def access_params(self, n_tokens: int) -> Any:
+        """Params for one engine access of `n_tokens` batch tokens.
+
+        The single parameter-access chokepoint: analog deployments tick
+        the executor here (read-disturb traffic + fresh noise
+        sub-streams), and hot swaps land on the next access.  The
+        continuous-batching scheduler routes every prefill/decode
+        dispatch through this, so executor accounting sees the real
+        scheduled traffic.
+        """
         if self.executor is not None:
             self.params = self.executor.tick(n_tokens)
         return self.params
+
+    # Back-compat alias (pre-scheduler name).
+    _access_params = access_params
 
     def swap_params(self, params: Any) -> None:
         """Hot-swap served weights (e.g. after an RRAM refresh).

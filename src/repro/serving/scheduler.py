@@ -1,0 +1,528 @@
+"""Continuous-batching request scheduler for analog serving.
+
+`ServeEngine.generate` runs one fixed batch to completion; under a real
+arrival stream that leaves decode slots idle whenever sequences finish
+at different times.  `ContinuousScheduler` keeps a fixed-shape decode
+batch of `n_slots` busy against a request queue:
+
+* **Admission** — arriving requests claim free slots; the prompt is
+  right-padded to a power-of-two bucket and prefilled *into the shared
+  pre-allocated cache* at the slot index (`models.decoding.prefill`
+  with ``true_len`` + `write_cache_slot`).  One compiled dispatch per
+  bucket size serves every admission, any slot, any neighbors.
+* **Decode** — every step runs the whole batch through ONE jitted step
+  of fixed shape; per-slot positions, per-slot stop bookkeeping, and
+  per-slot sampling keys mean batch composition never enters the
+  compiled computation's shape.  **Zero retrace across batch
+  compositions** is a hard contract: `trace_counts` is asserted flat
+  after `warmup()` by tests and `benchmarks/serving_traffic.py`.
+* **Per-request RNG** — token i of request `rid` is sampled with
+  ``fold_in(fold_in(master_key, rid), i)``, so a request's served
+  tokens are bit-identical whether it rides alone or in a full batch,
+  and in whichever slot it lands (the decode batch is row-independent:
+  attention, matmuls and sampling all act per slot).
+* **Accounting** — per-request queue delay, time-to-first-token and
+  total latency in decode-step units plus wall clock; exactly ONE
+  device->host sync per decode step (the (B,) token fetch), counted in
+  `host_syncs` and asserted by the serving benchmark.
+* **Analog path** — params are pulled through `ServeEngine.
+  access_params` every access, so a `CIMExecutor` ticks real
+  read-disturb traffic per scheduled step (prefill ticks the padded
+  bucket length — the physical tokens driven through the tiles; decode
+  ticks the full batch) and only tiny noise-key leaves change between
+  accesses: no retrace.  An optional `maintenance_fn` (e.g. a
+  `LifetimeSimulator` epoch with `traffic_fn=executor.drain_reads`)
+  interleaves between decode steps without touching the batch state.
+
+Ownership contract (DESIGN.md Sec. 13): the scheduler owns admission
+and slot lifecycle, the engine owns step functions and parameter
+access, the executor owns traffic/cost accounting.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill, write_cache_slot
+
+__all__ = [
+    "Request",
+    "RequestRecord",
+    "ContinuousScheduler",
+    "poisson_requests",
+]
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: prompt tokens + generation budget."""
+
+    rid: int                        # unique id (RNG sub-stream + records key)
+    prompt: Any                     # 1-D int token ids
+    max_new: int                    # generation budget (includes first token)
+    arrival: float = 0.0            # arrival time, decode-step units
+    eos_id: int | None = None       # per-request stop token
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle + latency accounting for one served request.
+
+    All times are in decode-step units on the scheduler's clock.  The
+    admitting prefill occupies the engine for `prefill_cost_steps`
+    (default 1.0), and a token emitted by a decode step completes at
+    the END of that step — so an unqueued request's total latency is
+    ``prefill_cost + (max_new - 1)`` steps.
+    """
+
+    rid: int
+    arrival: float
+    prompt_len: int
+    bucket_len: int                 # padded prefill length (physical tokens)
+    admit_step: float = 0.0         # admission (prefill dispatch) time
+    first_token_step: float = 0.0   # first token completion time
+    done_step: float = 0.0          # last token completion time
+    tokens: list = dataclasses.field(default_factory=list)
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def queue_delay_steps(self) -> float:
+        return self.admit_step - self.arrival
+
+    @property
+    def ttft_steps(self) -> float:
+        return self.first_token_step - self.arrival
+
+    @property
+    def latency_steps(self) -> float:
+        return self.done_step - self.arrival
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n - 1).bit_length(), 0)
+
+
+class ContinuousScheduler:
+    """Slot-based continuous batching over a `ServeEngine`'s step functions.
+
+    Args:
+      engine: `ServeEngine` (digital params or a `CIMExecutor`-backed
+        analog deployment).  The scheduler builds its own jitted step
+        functions (it needs per-slot sampling keys and slot admission)
+        but routes every parameter access through the engine so hot
+        swaps and executor ticking keep working.
+      n_slots: fixed decode batch size.
+      max_len: shared cache length; prompt_len + max_new must fit.
+      min_prefill_bucket: smallest padded prompt length (buckets are
+        powers of two in [min_prefill_bucket, max_len]).
+      key: master sampling key; request sub-streams fold from it.
+      maintenance_fn: called between decode steps every
+        `maintenance_every` steps (lifetime scrub epochs, metrics
+        flushes).  Runs on the host between dispatches: it never blocks
+        or reshapes the batch.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        n_slots: int = 4,
+        max_len: int = 128,
+        min_prefill_bucket: int = 8,
+        key: jax.Array | None = None,
+        maintenance_fn: Callable[[], Any] | None = None,
+        maintenance_every: int = 0,
+        prefill_cost_steps: float = 1.0,
+    ):
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.mesh = engine.mesh
+        self.temperature = float(engine.temperature)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        if min_prefill_bucket < 1 or min_prefill_bucket & (min_prefill_bucket - 1):
+            raise ValueError(
+                f"min_prefill_bucket must be a power of two: {min_prefill_bucket}"
+            )
+        self.min_bucket = min_prefill_bucket
+        self.prefill_cost_steps = float(prefill_cost_steps)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.maintenance_fn = maintenance_fn
+        self.maintenance_every = maintenance_every
+
+        cache = init_cache(self.cfg, n_slots, max_len)
+        if set(cache) != {"k", "v", "pos"}:
+            raise ValueError(
+                "continuous batching needs a pure attention cache (k/v/pos); "
+                f"got {sorted(cache)} for block={self.cfg.block}"
+            )
+        if self.cfg.pos_embedding == "sinusoidal":
+            # decode_step applies cache["pos"][0] as the batch-wide
+            # embedding offset; heterogeneous per-slot positions would
+            # silently read a neighbor's offset (RoPE is per-slot).
+            raise ValueError(
+                "continuous batching needs per-slot positions; sinusoidal "
+                "embeddings take a batch-wide offset"
+            )
+        if self.cfg.n_codebooks > 1:
+            raise ValueError("multi-codebook heads are not admissible")
+        self.cache = cache
+
+        # Trace-time side effects: each counter bumps once per compiled
+        # trace, so a steady-state serve asserts them flat.
+        self.trace_counts = {"admit": 0, "decode": 0}
+        self._admit_jit = self._build_admit()
+        self._decode_jit = jax.jit(self._build_decode())
+
+        self._rid = np.full((n_slots,), -1, np.int32)
+        self._gen = np.zeros((n_slots,), np.int32)
+        self._cur = np.zeros((n_slots,), np.int32)
+        self._slot_req: list[Request | None] = [None] * n_slots
+        self.records: dict[int, RequestRecord] = {}
+        self.completed: list[RequestRecord] = []
+        self.now = 0.0
+        self.decode_steps = 0
+        self.host_syncs = 0
+        self.admit_syncs = 0
+        self.admits = 0
+        self.tokens_generated = 0
+        self.prefill_tokens = 0
+        self.wall_s = 0.0
+
+    # ------------------------------------------------------- step builders
+    def _select_token(self, logits: jax.Array, key, rid, gen) -> jax.Array:
+        """Sample/argmax ONE slot's next token from its own sub-stream."""
+        if self.temperature > 0.0:
+            k = jax.random.fold_in(jax.random.fold_in(key, rid), gen)
+            return jax.random.categorical(
+                k, logits.astype(jnp.float32) / self.temperature
+            )
+        return jnp.argmax(logits, axis=-1)
+
+    def _build_admit(self):
+        cfg, mesh, max_len = self.cfg, self.mesh, self.max_len
+
+        def admit(params, tokens, true_len, rid, master, cache, slot):
+            # One jit specializes per padded bucket shape; this bump
+            # fires once per specialization (trace time only).
+            self.trace_counts["admit"] += 1
+            last, single = prefill(
+                params, {"tokens": tokens}, cfg, mesh,
+                max_len=max_len, true_len=true_len,
+            )
+            tok = self._select_token(last[0], master, rid, jnp.int32(0))
+            cache = write_cache_slot(cache, single, slot)
+            return tok.astype(jnp.int32), cache
+
+        return jax.jit(admit)
+
+    def _build_decode(self):
+        cfg, mesh = self.cfg, self.mesh
+
+        def decode(params, cache, cur, rids, gens, master):
+            self.trace_counts["decode"] += 1  # fires at trace time only
+            logits, cache = decode_step(
+                params, cache, {"tokens": cur[:, None]}, cfg, mesh
+            )
+            last = logits[:, -1] if logits.ndim == 3 else logits[:, -1, 0]
+            toks = jax.vmap(
+                lambda l, r, g: self._select_token(l, master, r, g)
+            )(last, rids, gens)
+            return toks.astype(jnp.int32), cache
+
+        return decode
+
+    # ------------------------------------------------------------ plumbing
+    def bucket_len(self, prompt_len: int) -> int:
+        b = max(_next_pow2(prompt_len), self.min_bucket)
+        return min(b, self.max_len)
+
+    def _free_slot(self) -> int | None:
+        free = np.flatnonzero(self._rid < 0)
+        return int(free[0]) if free.size else None
+
+    def active_slots(self) -> int:
+        return int(np.sum(self._rid >= 0))
+
+    def _finish(self, slot: int, t_done: float | None = None) -> None:
+        rec = self.records[self._slot_req[slot].rid]
+        rec.done_step = self.now if t_done is None else t_done
+        self.completed.append(rec)
+        self._rid[slot] = -1
+        self._gen[slot] = 0
+        self._cur[slot] = 0
+        self._slot_req[slot] = None
+
+    def _emit(self, slot: int, tok: int, t_done: float) -> bool:
+        """Record one generated token (completing at `t_done`); returns
+        True if the slot finished."""
+        req = self._slot_req[slot]
+        rec = self.records[req.rid]
+        if not rec.tokens:
+            rec.first_token_step = t_done
+        rec.tokens.append(tok)
+        self._gen[slot] += 1
+        self._cur[slot] = tok
+        self.tokens_generated += 1
+        done = self._gen[slot] >= req.max_new or (
+            req.eos_id is not None and tok == req.eos_id
+        )
+        if done:
+            self._finish(slot, t_done)
+        return done
+
+    # ------------------------------------------------------------- serving
+    def admit(self, req: Request, slot: int | None = None) -> int:
+        """Prefill `req` into a free slot of the shared cache."""
+        if slot is None:
+            slot = self._free_slot()
+        if slot is None:
+            raise RuntimeError("no free slot")
+        if self._rid[slot] >= 0:
+            raise RuntimeError(
+                f"slot {slot} is occupied by request {self._rid[slot]}"
+            )
+        plen = len(req.prompt)
+        if plen < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if plen + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + max_new {req.max_new} "
+                f"exceeds max_len {self.max_len}"
+            )
+        bucket = self.bucket_len(plen)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = np.asarray(req.prompt, np.int32)
+        params = self.engine.access_params(bucket)  # physical prefill tokens
+        with jax.transfer_guard_device_to_host("disallow"):
+            tok, self.cache = self._admit_jit(
+                params,
+                jnp.asarray(padded),
+                jnp.asarray([plen], jnp.int32),
+                jnp.int32(req.rid),
+                self.key,
+                self.cache,
+                jnp.int32(slot),
+            )
+        tok = int(jax.device_get(tok))  # the one (small) admit sync
+        self.admit_syncs += 1
+        self.admits += 1
+        self.prefill_tokens += bucket
+        self._rid[slot] = req.rid
+        self._gen[slot] = 0
+        self._slot_req[slot] = req
+        self.records[req.rid] = RequestRecord(
+            rid=req.rid, arrival=req.arrival, prompt_len=plen,
+            bucket_len=bucket, admit_step=self.now,
+        )
+        # The prefill occupies the engine: advance the clock before the
+        # first token completes.
+        self.now += self.prefill_cost_steps
+        self._emit(slot, tok, self.now)
+        return slot
+
+    def step(self) -> None:
+        """One decode step of the whole batch + slot bookkeeping.
+
+        Exactly one device->host sync: the (B,) token fetch.  ENFORCED,
+        not just counted — the dispatch runs under a device->host
+        transfer guard, so any implicit sync creeping into the decode
+        path (a stray `float()`/`np.asarray` on a device value) raises
+        instead of silently serializing the loop.
+        """
+        params = self.engine.access_params(self.n_slots)
+        with jax.transfer_guard_device_to_host("disallow"):
+            toks, self.cache = self._decode_jit(
+                params,
+                self.cache,
+                jnp.asarray(self._cur),
+                jnp.asarray(self._rid),
+                jnp.asarray(self._gen),
+                self.key,
+            )
+        toks = np.asarray(jax.device_get(toks))  # THE per-step host sync
+        self.host_syncs += 1
+        self.decode_steps += 1
+        for slot in np.flatnonzero(self._rid >= 0):
+            # a decode-emitted token completes at the END of this step
+            self._emit(int(slot), int(toks[slot]), self.now + 1.0)
+
+    def warmup(
+        self,
+        prompt_lens: list[int] | None = None,
+        prompt_range: tuple[int, int] | None = None,
+    ) -> None:
+        """Compile every dispatch the serve loop will hit, then reset.
+
+        Admits one throwaway request per distinct prefill bucket and
+        runs one decode step; afterwards `trace_counts` must stay flat
+        for any traffic whose prompts map onto the warmed buckets.
+        `prompt_range=(lo, hi)` warms EVERY bucket a prompt length in
+        [lo, hi] can map to (the usual serve-loop precondition).
+        """
+        if prompt_range is not None:
+            lo, hi = prompt_range
+            # derive the warmed set from the same mapping real traffic
+            # uses, so it can never diverge from bucket_len()
+            buckets = sorted({self.bucket_len(p) for p in range(lo, hi + 1)})
+        else:
+            prompt_lens = prompt_lens or [self.min_bucket]
+            buckets = sorted({self.bucket_len(p) for p in prompt_lens})
+        for i, b in enumerate(buckets):
+            slot = self._free_slot()
+            if slot is None:  # more buckets than slots: recycle slot 0
+                self._finish(0)
+                slot = 0
+            # A b-token prompt maps exactly onto bucket b; a clamped top
+            # bucket (b == max_len) warms with max_len - 1 (any length in
+            # (b/2, b] still maps to b).  A bucket no admissible request
+            # can reach (bucket_len(plen) != b once max_new >= 1 is
+            # accounted) is skipped.  Dummy rids sit far above real ones.
+            plen = min(b, self.max_len - 1)
+            if self.bucket_len(plen) != b:
+                continue
+            self.admit(
+                Request(rid=(1 << 30) + i, prompt=[0] * plen,
+                        max_new=2 if plen + 2 <= self.max_len else 1,
+                        arrival=self.now),
+                slot,
+            )
+        if not self.active_slots():
+            # every dummy finished at admission (max_new=1 top buckets):
+            # keep one slot live so the decode dispatch compiles too
+            plen = max(1, min(self.min_bucket, self.max_len - 2))
+            self.admit(
+                Request(rid=(1 << 30) + len(buckets), prompt=[0] * plen,
+                        max_new=2, arrival=self.now)
+            )
+        self.step()
+        self.reset(keep_traces=True)
+
+    def reset(self, keep_traces: bool = False) -> None:
+        """Clear slot state, records and counters (compiled fns survive)."""
+        self._rid[:] = -1
+        self._gen[:] = 0
+        self._cur[:] = 0
+        self._slot_req = [None] * self.n_slots
+        self.records = {}
+        self.completed = []
+        self.now = 0.0
+        self.decode_steps = 0
+        self.host_syncs = 0
+        self.admit_syncs = 0
+        self.admits = 0
+        self.tokens_generated = 0
+        self.prefill_tokens = 0
+        self.wall_s = 0.0
+        if not keep_traces:
+            self.trace_counts = {"admit": 0, "decode": 0}
+
+    def run(
+        self, requests: list[Request], *, max_steps: int = 1_000_000
+    ) -> list[RequestRecord]:
+        """Serve an arrival stream to completion (FIFO admission).
+
+        The clock is the decode step: each step advances `now` by 1, and
+        idle periods fast-forward to the next arrival.  Returns the
+        completed `RequestRecord`s sorted by rid.
+        """
+        pending = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival, r.rid))
+        )
+        t0 = time.perf_counter()
+        steps0 = self.decode_steps
+        while pending or self.active_slots():
+            while (
+                pending
+                and pending[0].arrival <= self.now
+                and self._free_slot() is not None
+            ):
+                self.admit(pending.popleft())
+            if not self.active_slots():
+                if not pending:  # last request completed at admission
+                    break
+                self.now = max(self.now, pending[0].arrival)
+                continue
+            self.step()
+            self.now += 1.0
+            if (
+                self.maintenance_fn is not None
+                and self.maintenance_every > 0
+                and self.decode_steps % self.maintenance_every == 0
+            ):
+                self.maintenance_fn()
+            if self.decode_steps - steps0 >= max_steps:
+                break
+        self.wall_s += time.perf_counter() - t0
+        return sorted(self.completed, key=lambda r: r.rid)
+
+    # ----------------------------------------------------------- reporting
+    def latency_stats(self) -> dict[str, float]:
+        """Aggregate latency/throughput stats over completed requests."""
+        lats = np.array([r.latency_steps for r in self.completed])
+        ttfts = np.array([r.ttft_steps for r in self.completed])
+        queue = np.array([r.queue_delay_steps for r in self.completed])
+        steps = max(self.decode_steps, 1)
+        out = {
+            "completed": float(len(self.completed)),
+            "decode_steps": float(self.decode_steps),
+            "tokens_generated": float(self.tokens_generated),
+            "tokens_per_step": self.tokens_generated / steps,
+            "wall_s": self.wall_s,
+            "tokens_per_s": (
+                self.tokens_generated / self.wall_s if self.wall_s > 0 else 0.0
+            ),
+        }
+        if len(lats):
+            out.update(
+                p50_latency_steps=float(np.percentile(lats, 50)),
+                p99_latency_steps=float(np.percentile(lats, 99)),
+                p50_ttft_steps=float(np.percentile(ttfts, 50)),
+                p99_ttft_steps=float(np.percentile(ttfts, 99)),
+                mean_queue_delay_steps=float(queue.mean()),
+            )
+        return out
+
+
+def poisson_requests(
+    seed: int,
+    n: int,
+    *,
+    rate: float,
+    vocab: int,
+    prompt_lens: tuple[int, int] = (4, 24),
+    max_new: tuple[int, int] = (4, 16),
+    eos_id: int | None = None,
+    start_rid: int = 0,
+) -> list[Request]:
+    """A Poisson arrival stream of variable-length requests.
+
+    `rate` is the offered load in requests per decode step; inter-arrival
+    times are Exp(1/rate).  Prompt lengths and generation budgets draw
+    uniformly from their (lo, hi) ranges.
+    """
+    g = np.random.default_rng(seed)
+    arrivals = np.cumsum(g.exponential(1.0 / rate, size=n))
+    reqs = []
+    for i in range(n):
+        plen = int(g.integers(prompt_lens[0], prompt_lens[1] + 1))
+        reqs.append(
+            Request(
+                rid=start_rid + i,
+                prompt=g.integers(0, vocab, size=plen).astype(np.int32),
+                max_new=int(g.integers(max_new[0], max_new[1] + 1)),
+                arrival=float(arrivals[i]),
+                eos_id=eos_id,
+            )
+        )
+    return reqs

@@ -10,11 +10,21 @@ Run from the repo root (only to re-pin after an INTENDED numerical
 change, never to paper over an accidental one):
 
     PYTHONPATH=src python tests/golden/gen_readout_golden.py
+
+``--check`` is the CI drift guard: it regenerates every array in memory
+and fails (exit 1) unless each one is BIT-identical to the committed
+archive — so the goldens can never silently go stale against the code,
+and a numerical change can never ride in without re-pinning them.
+(Array payloads are compared, not the npz container bytes: zip framing
+is not reproducible across numpy versions.)
+
+    PYTHONPATH=src python tests/golden/gen_readout_golden.py --check
 """
 
 from __future__ import annotations
 
 import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +55,7 @@ def _cfg(method: WVMethod, **kw) -> WVConfig:
     )
 
 
-def main() -> None:
+def generate() -> dict[str, np.ndarray]:
     out: dict[str, np.ndarray] = {}
     tkey = jax.random.PRNGKey(0)
     targets = jax.random.randint(tkey, (12, N), 0, 8).astype(jnp.float32)
@@ -125,6 +135,39 @@ def main() -> None:
         ))
     )
 
+    return out
+
+
+def check() -> int:
+    """Regenerate in memory; compare bit-exactly against the committed npz."""
+    fresh = generate()
+    with np.load(OUT) as committed:
+        drift = []
+        missing = sorted(set(fresh) ^ set(committed.files))
+        for k in sorted(set(fresh) & set(committed.files)):
+            a, b = fresh[k], committed[k]
+            if a.shape != b.shape or a.dtype != b.dtype or not np.array_equal(
+                a, b, equal_nan=True
+            ):
+                drift.append(k)
+    if missing or drift:
+        print(
+            f"GOLDEN DRIFT vs {OUT}:\n"
+            f"  key set mismatch: {missing or 'none'}\n"
+            f"  diverged arrays:  {drift or 'none'}\n"
+            "If the numerical change is INTENDED, re-pin with\n"
+            "  PYTHONPATH=src python tests/golden/gen_readout_golden.py",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"golden check OK: {len(fresh)} arrays bit-identical to {OUT}")
+    return 0
+
+
+def main() -> None:
+    if "--check" in sys.argv:
+        sys.exit(check())
+    out = generate()
     np.savez_compressed(OUT, **out)
     print(f"wrote {OUT}: {len(out)} arrays")
 

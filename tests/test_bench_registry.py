@@ -1,0 +1,79 @@
+"""Tier-1 smoke for the benchmarks/run.py registry + repo hygiene.
+
+The registry is LAZY (no jax import for --list / bad names), so the
+listing and error paths are cheap subprocesses; one genuinely tiny
+quick-mode benchmark runs end-to-end to prove the dispatch path works.
+Hygiene: compiled-bytecode artifacts must never be tracked.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(*args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=timeout,
+    )
+
+
+def test_list_names_without_importing_jax():
+    r = _run("--list", timeout=120)
+    assert r.returncode == 0, r.stderr
+    names = [ln.split()[0] for ln in r.stdout.splitlines() if ln.strip()]
+    for expected in ("fig9.convergence", "serving.traffic", "readout.sweep"):
+        assert expected in names
+    assert "[quick]" in r.stdout  # quick-capable entries are tagged
+
+
+def test_unknown_benchmark_exits_nonzero():
+    r = _run("definitely.not.a.benchmark", timeout=120)
+    assert r.returncode != 0
+    assert "unknown benchmark" in r.stderr
+    # non-quick-capable selection under --quick is also an error
+    r2 = _run("fig9.convergence", "--quick", timeout=120)
+    assert r2.returncode != 0
+    assert "not quick-capable" in r2.stderr
+
+
+def test_tiny_quick_benchmark_runs():
+    """One real quick-mode benchmark through the registry dispatch."""
+    r = _run("readout.sweep", "--quick")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "all-passed" in r.stdout
+
+
+# ------------------------------------------------------------------ hygiene
+def _git_ls_files():
+    try:
+        out = subprocess.run(
+            ["git", "ls-files"], cwd=REPO, capture_output=True, text=True,
+            timeout=60,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    return out.stdout.splitlines()
+
+def test_no_bytecode_tracked_and_ignored():
+    """No .pyc/__pycache__ may ever be committed; .gitignore blocks them."""
+    tracked = _git_ls_files()
+    offenders = [
+        f for f in tracked if f.endswith(".pyc") or "__pycache__" in f
+    ]
+    assert offenders == [], offenders
+    with open(os.path.join(REPO, ".gitignore")) as f:
+        gitignore = f.read().splitlines()
+    assert "__pycache__/" in gitignore
+    assert "*.pyc" in gitignore

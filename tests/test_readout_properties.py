@@ -1,0 +1,211 @@
+"""Property-based + statistical contracts for the readout subsystem.
+
+Fixed-seed goldens (tests/test_readout.py) pin *exact values*; this
+module pins the *claims* — over random orders, random inputs and seed
+ensembles — the way reference-tuning characterization (arXiv:2502.05948)
+and bit-error-tolerance analyses (arXiv:1904.03652) test distributions
+rather than point samples:
+
+* algebra (hypothesis): FWHT involution + Parseval over N in {2..128},
+  decode∘encode identity, SAR monotonicity + rail clipping, ternary
+  compare deadzone correctness over random thresholds;
+* statistics (plain seeds, chi-square-bounded): inverse-Hadamard decode
+  cuts uncorrelated read-noise variance by ~N (eq. 6), cancels a
+  constant common-mode disturbance exactly on the balanced rows
+  (eq. 7), and M-read averaging lands on its analytic floor
+  sigma_uc^2/M + sigma_cm^2 (MRA's common-mode wall).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core import hadamard as hd
+from repro.core.types import ADCConfig, NoiseConfig
+from repro.readout import (
+    Converter,
+    ReadoutBasis,
+    ReadoutConfig,
+    read_columns,
+)
+from repro.readout.converter import compare_read, sar_quantize
+from repro.readout.readout import decode_magnitude
+
+ORDERS = [2, 4, 8, 16, 32, 64, 128]
+
+
+def _rand(seed: int, *shape) -> np.ndarray:
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+# ----------------------------------------------------------- hypothesis
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(ORDERS))
+def test_fwht_involution_and_parseval(seed, n):
+    """H is symmetric with H^T H = N I: applying the butterfly twice
+    scales by N, and energy scales by N (Parseval)."""
+    x = _rand(seed, 3, n) * 4.0
+    y = np.asarray(hd.fwht(jnp.asarray(x)))
+    np.testing.assert_allclose(
+        np.asarray(hd.fwht(jnp.asarray(y))), n * x, rtol=1e-5, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.sum(y * y, -1), n * np.sum(x * x, -1), rtol=1e-5
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(ORDERS))
+def test_decode_encode_identity(seed, n):
+    """decode(encode(w)) == w both in core.hadamard and through a clean
+    IDEAL-converter readout sweep."""
+    w = _rand(seed, 4, n) * 3.0
+    np.testing.assert_allclose(
+        np.asarray(hd.decode(hd.encode(jnp.asarray(w)))), w,
+        rtol=1e-5, atol=1e-5,
+    )
+    cfg = ReadoutConfig(
+        basis=ReadoutBasis.HADAMARD, converter=Converter.IDEAL, n_cells=n,
+        noise=NoiseConfig(sigma_read_lsb=0.0),
+    )
+    res = read_columns(jax.random.PRNGKey(seed % 997), jnp.asarray(w), cfg)
+    np.testing.assert_allclose(
+        np.asarray(decode_magnitude(res.values, cfg)), w, rtol=1e-5, atol=1e-5
+    )
+    assert res.n_reads == n
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(2, 12),
+    st.booleans(),
+    st.floats(4.0, 512.0),
+)
+def test_sar_monotone_and_rails(seed, bits, centered, full_scale):
+    """SAR quantization is monotone and saturates at the converter rails."""
+    y = np.sort(_rand(seed, 257)) * full_scale  # spans well past the rails
+    q = np.asarray(sar_quantize(jnp.asarray(y), bits, full_scale, centered))
+    assert np.all(np.diff(q) >= 0.0)  # monotone
+    lo = -full_scale / 2.0 if centered else 0.0
+    w = full_scale / (1 << bits)
+    assert q.min() >= lo - 1e-4
+    assert q.max() <= lo + full_scale - w + 1e-4  # top code, not lo+FS
+    # deep saturation maps to the exact rail codes
+    assert np.asarray(
+        sar_quantize(jnp.asarray([lo - full_scale]), bits, full_scale, centered)
+    )[0] == pytest.approx(lo)
+    # in-range values land within half a code width
+    inside = (y > lo) & (y < lo + full_scale - w)
+    assert np.all(np.abs(q[inside] - y[inside]) <= 0.5 * w + 1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 3.0))
+def test_compare_ternary_deadzone(seed, deadzone):
+    """Ternary compare: sign matches the deadzone definition exactly and
+    the Fig. 7(c) comparison count is 1 below target, 2 otherwise."""
+    g = np.random.default_rng(seed)
+    y = g.normal(0.0, 4.0, size=(6, 16)).astype(np.float32)
+    t = g.normal(0.0, 4.0, size=(6, 16)).astype(np.float32)
+    sign, n_cmp = compare_read(jnp.asarray(y), jnp.asarray(t), deadzone)
+    sign, n_cmp = np.asarray(sign), np.asarray(n_cmp)
+    d = y - t
+    np.testing.assert_array_equal(sign == -1.0, d < -deadzone)
+    np.testing.assert_array_equal(sign == 1.0, d > deadzone)
+    np.testing.assert_array_equal(sign == 0.0, np.abs(d) <= deadzone)
+    np.testing.assert_array_equal(n_cmp == 1, d < -deadzone)
+    assert set(np.unique(n_cmp)) <= {1, 2}
+
+
+# ------------------------------------------------- statistical contracts
+def _sweep_errors(basis, n, sigma, rho, m=1, seeds=4, c=64):
+    """Decoded cell-domain errors over a seed ensemble: (seeds*C, N)."""
+    cfg = ReadoutConfig(
+        basis=basis, converter=Converter.IDEAL, n_cells=n, avg_reads=m,
+        noise=NoiseConfig(sigma_read_lsb=sigma, rho_cm=rho),
+    )
+    g = jnp.asarray(_rand(123, c, n) * 2.0)
+    errs = []
+    for s in range(seeds):
+        res = read_columns(jax.random.PRNGKey(1000 + s), g, cfg)
+        errs.append(np.asarray(decode_magnitude(res.values, cfg)) - np.asarray(g))
+    return np.concatenate(errs, 0)
+
+
+def _chi2_bounds(dof: int, z: float = 4.5) -> tuple[float, float]:
+    """Normal-approx chi-square band for a sample-variance / true-variance
+    ratio with `dof` degrees of freedom (z=4.5 -> ~1e-5 false alarm)."""
+    half = z * (2.0 / dof) ** 0.5
+    return 1.0 - half, 1.0 + half
+
+
+def test_hadamard_variance_reduction_is_n():
+    """Headline claim (eq. 6): uncorrelated read noise of std sigma lands
+    on the decoded estimate with variance sigma^2/N after inverse-
+    Hadamard decoding, vs sigma^2 for one-hot reads."""
+    n, sigma = 32, 0.5
+    e_hd = _sweep_errors(ReadoutBasis.HADAMARD, n, sigma, rho=0.0)
+    e_oh = _sweep_errors(ReadoutBasis.ONE_HOT, n, sigma, rho=0.0)
+    dof = e_hd.size
+    lo, hi = _chi2_bounds(dof)
+    assert lo <= np.mean(e_hd**2) / (sigma**2 / n) <= hi
+    assert lo <= np.mean(e_oh**2) / sigma**2 <= hi
+    ratio = np.mean(e_oh**2) / np.mean(e_hd**2)
+    assert n * lo / hi <= ratio <= n * hi / lo
+
+
+def test_hadamard_cancels_common_mode_exactly():
+    """Headline claim (eq. 7): a per-sweep constant disturbance mu lands
+    entirely on cell 0 after decoding; the N-1 balanced rows cancel it.
+    With zero signal the butterfly's cancellation is bitwise EXACT."""
+    n, c = 32, 48
+    cfg = ReadoutConfig(
+        basis=ReadoutBasis.HADAMARD, converter=Converter.IDEAL, n_cells=n,
+        noise=NoiseConfig(sigma_read_lsb=0.8, rho_cm=1.0),  # pure common mode
+    )
+    res = read_columns(jax.random.PRNGKey(3), jnp.zeros((c, n)), cfg)
+    dec = np.asarray(decode_magnitude(res.values, cfg))
+    assert np.all(dec[:, 1:] == 0.0)          # bitwise exact cancellation
+    assert np.all(np.abs(dec[:, 0]) > 0.0)    # ... mu all lands on cell 0
+    # one-hot reads eat the same disturbance on EVERY cell instead
+    cfg_oh = cfg.replace(basis=ReadoutBasis.ONE_HOT)
+    res_oh = read_columns(jax.random.PRNGKey(3), jnp.zeros((c, n)), cfg_oh)
+    dec_oh = np.asarray(decode_magnitude(res_oh.values, cfg_oh))
+    col_mu = dec_oh[:, :1]
+    assert np.all(np.abs(col_mu) > 0.0)
+    np.testing.assert_allclose(dec_oh, np.broadcast_to(col_mu, dec_oh.shape),
+                               rtol=0, atol=1e-6)
+    # nonzero signal: cancellation to rounding (not bitwise) still holds
+    g = jnp.asarray(_rand(7, c, n) * 2.0)
+    res2 = read_columns(jax.random.PRNGKey(3), g, cfg)
+    err2 = np.asarray(decode_magnitude(res2.values, cfg)) - np.asarray(g)
+    assert np.abs(err2[:, 1:]).max() < 1e-4
+
+
+def test_mra_averaging_matches_analytic_floor():
+    """Headline claim (Sec. 2.3): M-read averaging shrinks only the
+    uncorrelated term — error variance tracks sigma_uc^2/M + sigma_cm^2,
+    so MRA walls at the common-mode floor instead of reaching 0."""
+    n, sigma, rho = 16, 0.6, 0.25
+    noise = NoiseConfig(sigma_read_lsb=sigma, rho_cm=rho)
+    var_uc, var_cm = noise.sigma_uc_lsb**2, noise.sigma_cm_lsb**2
+    seeds, c = 6, 128
+    for m in (1, 4, 16):
+        errs = _sweep_errors(
+            ReadoutBasis.ONE_HOT, n, sigma, rho, m=m, seeds=seeds, c=c
+        )
+        analytic = var_uc / m + var_cm
+        # the shared per-column common mode shrinks the effective dof to
+        # ~#sweeps when it dominates; bound with the smaller count
+        lo, hi = _chi2_bounds(seeds * c)
+        assert lo <= np.mean(errs**2) / analytic <= hi, m
+    # and the M->inf floor is strictly the common-mode power: at M=16
+    # the uncorrelated residue is down 16x
+    e16 = _sweep_errors(ReadoutBasis.ONE_HOT, n, sigma, rho, m=16,
+                        seeds=seeds, c=c)
+    assert np.mean(e16**2) < var_cm * 1.35
+    assert np.mean(e16**2) > var_cm * 0.75
