@@ -31,7 +31,6 @@ from __future__ import annotations
 import json
 import pathlib
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +41,7 @@ from repro.core.programmer import deploy_arrays
 from repro.models.transformer import forward
 from repro.serving import ServeEngine
 
-from .common import emit
+from .common import emit, export_trace, stopwatch
 from .fig10_robustness import _train_tiny_lm
 
 _VERIFY_SIGMA = 0.7  # severe verify-read noise (paper Fig. 10 regime)
@@ -122,9 +121,9 @@ def main(quick: bool = False) -> dict:
         ("analog", ServeEngine(cfg, executor=ex)),
     ):
         engine.generate(prompts, max_new=2)  # compile
-        t0 = time.perf_counter()
-        engine.generate(prompts, max_new=gen_new)
-        dt = time.perf_counter() - t0
+        with stopwatch(f"cim_generate_{name}", path=name) as w:
+            engine.generate(prompts, max_new=gen_new)
+        dt = w.seconds
         tput[name] = gen_batch * gen_new / dt
         emit(f"cim.serve.{name}", dt * 1e6, f"tok_per_s={tput[name]:.1f}")
     lat_ns, e_pj = ex.token_cost()
@@ -161,6 +160,7 @@ def main(quick: bool = False) -> dict:
     name = "BENCH_cim_quick.json" if quick else "BENCH_cim.json"
     out = pathlib.Path(__file__).with_name(name)
     out.write_text(json.dumps(result, indent=1))
+    export_trace("cim", quick)
     return result
 
 

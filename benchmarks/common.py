@@ -1,29 +1,83 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing, tracing, and CSV emission.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows, where
 `derived` carries the figure's headline quantity (error/iterations/
 ratio), so `python -m benchmarks.run` is grep-able.
+
+Timing is span-backed (obs, DESIGN.md Sec. 14): `timed` wraps its
+measurement loop in an `obs.span`, and `stopwatch` is the span-based
+replacement for ad-hoc `time.perf_counter()` pairs — so every
+benchmark's timing shows up in the exported Chrome/Perfetto trace
+(`export_trace` writes ``benchmarks/TRACE_<bench>[_quick].json``, the
+artifact `python -m repro.obs.report` summarizes).
 """
 
 from __future__ import annotations
 
+import contextlib
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import WVConfig, WVMethod, program_columns
 
 WEIGHT_LSB = 8.06  # sqrt(65): cell-domain rms -> B=6 two-slice weight rms
 
+_BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
-def timed(fn, *args, reps: int = 1):
+
+def timed(fn, *args, reps: int = 1, name: str | None = None):
+    """Compile once, then time `reps` calls; returns (out, us_per_call).
+
+    The measurement loop (including the trailing block_until_ready) is
+    recorded as one ``bench`` span named `name` (or the callable's name).
+    """
     fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return out, (time.perf_counter() - t0) / reps * 1e6
+    label = name or getattr(fn, "__name__", "timed") or "timed"
+    with obs.span(f"bench.{label}", cat="bench", reps=reps) as sp:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        sp["us_per_call"] = us
+    return out, us
+
+
+class _Stopwatch:
+    seconds: float = 0.0
+
+    @property
+    def us(self) -> float:
+        return self.seconds * 1e6
+
+
+@contextlib.contextmanager
+def stopwatch(name: str, cat: str = "bench", **args):
+    """Span-backed wall timer: ``with stopwatch("x") as w: ...; w.seconds``."""
+    w = _Stopwatch()
+    with obs.span(f"bench.{name}", cat=cat, **args):
+        t0 = time.perf_counter()
+        try:
+            yield w
+        finally:
+            w.seconds = time.perf_counter() - t0
+
+
+def trace_path(bench: str, quick: bool = False) -> str:
+    """Gitignored trace artifact path next to the BENCH_*.json outputs."""
+    suffix = "_quick" if quick else ""
+    return os.path.join(_BENCH_DIR, f"TRACE_{bench}{suffix}.json")
+
+
+def export_trace(bench: str, quick: bool = False) -> str:
+    """Export the run's trace events; returns the written path."""
+    path = obs.tracer.export(trace_path(bench, quick))
+    print(f"# trace: {path}")
+    return path
 
 
 def run_wv(cfg: WVConfig, n_columns: int = 512, seed: int = 0):

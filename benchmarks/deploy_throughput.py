@@ -9,7 +9,7 @@ parameter tree is deployed twice through each path:
                 (PR 1's `_program_leaf` loop): one EAGER
                 `program_columns` call per leaf — the while loop
                 re-traces on every call — plus `DeployReport.merge`'s
-                5 scalar host pulls per leaf;
+                7 scalar host pulls per leaf;
 * perleaf_jit — `deploy_arrays(batched=False)`: per-leaf dispatches
                 through the shared jit cache (one trace per distinct
                 leaf shape), still per-leaf host syncs;
@@ -30,7 +30,6 @@ from __future__ import annotations
 import json
 import pathlib
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,7 @@ from repro.core.cost import CircuitCost
 from repro.core.programmer import DeployReport, _eligible_leaves, deploy_arrays
 from repro.quant import QuantConfig, pack_columns, quantize_weight
 
-from .common import emit
+from .common import emit, export_trace, stopwatch
 
 _MIN_BUCKET = 256
 
@@ -72,7 +71,7 @@ def _deploy_baseline_eager(params, cfg: WVConfig, seed: int = 1) -> DeployReport
     Eager `program_columns` per leaf (the `lax.while_loop` re-traces on
     EVERY call — this is the "retraces per leaf" cost the pipeline
     removes), legacy batch-shaped RNG, and `DeployReport.merge` blocking
-    on 5 scalar host pulls per leaf.
+    on 7 scalar host pulls per leaf.
     """
     q_cfg = QuantConfig(weight_bits=cfg.weight_bits, cell_bits=cfg.device.bc)
     key = jax.random.PRNGKey(seed)
@@ -96,14 +95,15 @@ def _deploy_baseline_eager(params, cfg: WVConfig, seed: int = 1) -> DeployReport
 def _time_deploy(params, cfg, batched: bool, seed: int = 1):
     """One full deploy; returns (seconds, report, compiles, host_syncs)."""
     c0, s0 = pipeline.compile_count(), pipeline.host_sync_count()
-    t0 = time.perf_counter()
-    _, report = deploy_arrays(
-        jax.random.PRNGKey(seed), params, cfg,
-        batched=batched, min_bucket=_MIN_BUCKET,
-    )
-    dt = time.perf_counter() - t0
+    with stopwatch(
+        "deploy_arrays", batched=batched, seed=seed
+    ) as w:
+        _, report = deploy_arrays(
+            jax.random.PRNGKey(seed), params, cfg,
+            batched=batched, min_bucket=_MIN_BUCKET,
+        )
     return (
-        dt,
+        w.seconds,
         report,
         pipeline.compile_count() - c0,
         pipeline.host_sync_count() - s0,
@@ -120,9 +120,9 @@ def main(quick: bool = False) -> dict:
     rows = {}
     # Every call of the eager baseline re-traces, so one timed run IS
     # its steady state (cold == warm).
-    t0 = time.perf_counter()
-    base_report = _deploy_baseline_eager(params, cfg)
-    base_s = time.perf_counter() - t0
+    with stopwatch("deploy_baseline_eager") as w:
+        base_report = _deploy_baseline_eager(params, cfg)
+    base_s = w.seconds
     n_leaves = len(base_report.leaves)
     rows["baseline"] = dict(
         columns=base_report.num_columns,
@@ -133,7 +133,7 @@ def main(quick: bool = False) -> dict:
         warm_columns_per_sec=base_report.num_columns / base_s,
         compiles=n_leaves,        # eager: the WV loop re-traces per leaf
         warm_compiles=n_leaves,
-        host_syncs=5 * n_leaves,  # DeployReport.merge scalar pulls
+        host_syncs=7 * n_leaves,  # DeployReport.merge scalar pulls
         mean_iterations=base_report.mean_iterations,
         rms_cell_error_lsb=base_report.rms_cell_error_lsb,
     )
@@ -141,17 +141,17 @@ def main(quick: bool = False) -> dict:
         f"deploy.baseline{'.quick' if quick else ''}",
         base_s * 1e6,
         f"cols_per_s={base_report.num_columns / base_s:.0f} "
-        f"retraces={n_leaves} host_syncs={5 * n_leaves}",
+        f"retraces={n_leaves} host_syncs={7 * n_leaves}",
     )
 
     for name, batched in (("perleaf_jit", False), ("pipeline", True)):
         cold_s, report, compiles, syncs = _time_deploy(params, cfg, batched)
         warm_s, _, warm_compiles, _ = _time_deploy(params, cfg, batched, seed=2)
         cols = report.num_columns
-        # The per-leaf paths pay `DeployReport.merge`'s 5 scalar
+        # The per-leaf paths pay `DeployReport.merge`'s 7 scalar
         # device->host pulls per leaf; the pipeline path is counted by
         # `host_fetch`.
-        host_syncs = syncs if batched else 5 * len(report.leaves)
+        host_syncs = syncs if batched else 7 * len(report.leaves)
         rows[name] = dict(
             columns=cols,
             leaves=len(report.leaves),
@@ -210,6 +210,7 @@ def main(quick: bool = False) -> dict:
     name = "BENCH_deploy_quick.json" if quick else "BENCH_deploy.json"
     out = pathlib.Path(__file__).with_name(name)
     out.write_text(json.dumps(result, indent=1))
+    export_trace("deploy", quick)
     return result
 
 

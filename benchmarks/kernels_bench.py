@@ -22,7 +22,7 @@ from .common import emit, timed
 def main() -> None:
     x = jax.random.normal(jax.random.PRNGKey(0), (4096, 32))
     ref_fn = jax.jit(fwht_ref.fwht)
-    out_ref, us_ref = timed(ref_fn, x)
+    out_ref, us_ref = timed(ref_fn, x, name="kernels.fwht_ref")
     out_k = fwht_ops.fwht(x)
     err = float(jnp.max(jnp.abs(out_k - out_ref)))
     emit("kernels.fwht_ref", us_ref, f"C=4096 N=32 kernel_maxerr={err:.1e}")
@@ -42,7 +42,7 @@ def main() -> None:
     )
     p = WVCellParams(4.0, 2, True, True, 0.25, 16.0, 7.0, 0.35, 0.85)
     ref_fn = jax.jit(lambda *a: wv_ref.wv_cell_update(*a, p))
-    out_ref, us = timed(ref_fn, *args)
+    out_ref, us = timed(ref_fn, *args, name="kernels.wv_step_ref")
     out_k = wv_ops.wv_cell_update(*args, p)
     err = max(
         float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
@@ -65,7 +65,7 @@ def main() -> None:
             use_pallas=False,
         )
     )
-    out_ref, us = timed(ref_fn, xb, gp, gn, nz)
+    out_ref, us = timed(ref_fn, xb, gp, gn, nz, name="kernels.cim_vmm_ref")
     out_k = cim_vmm(
         xb, gp, gn, bc=3, adc_bits=9, full_scale=448.0, noise=nz,
         use_pallas=True,

@@ -49,7 +49,7 @@ from repro.readout import (
     sweep_cost,
 )
 
-from .common import emit, timed
+from .common import emit, export_trace, timed
 
 _SIGMA_READ = 0.7      # severe verify-read noise (paper Fig. 10 regime)
 _SIGMA_OFFSET = 1.5    # static per-column reference drift, cell-LSB
@@ -86,7 +86,9 @@ def main(quick: bool = False) -> dict:
             ("drifted", offsets),
             ("calibrated", trimmed),
         ):
-            (g, st), us = timed(fn, pkey, targets, offs)
+            (g, st), us = timed(
+                fn, pkey, targets, offs, name=f"readout.{m.value}.{scenario}"
+            )
             r = float(jnp.mean(st.rms_error_lsb))
             en = float(jnp.mean(st.energy_pj))
             rms[(m.value, scenario)] = r
@@ -135,6 +137,7 @@ def main(quick: bool = False) -> dict:
     name = "BENCH_readout_quick.json" if quick else "BENCH_readout.json"
     out = pathlib.Path(__file__).with_name(name)
     out.write_text(json.dumps(result, indent=1))
+    export_trace("readout", quick)
     return result
 
 

@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 from functools import partial
 
 import jax
@@ -43,7 +42,7 @@ from repro.lifetime import (
     init_cell_state,
 )
 
-from .common import WEIGHT_LSB, emit
+from .common import WEIGHT_LSB, emit, export_trace, stopwatch
 
 _POLICIES = [
     RefreshPolicy.NONE,
@@ -119,16 +118,18 @@ def _simulate(
 
 
 def main(n_columns: int = 192, seed: int = 0) -> dict:
-    t0 = time.time()
     results = {}
     for m in _METHODS:
         cfg = WVConfig(method=m)
         for policy in _POLICIES:
-            r = _simulate(cfg, policy, n_columns, seed)
+            with stopwatch(
+                f"retention.{m.value}.{policy.value}", cat="lifetime"
+            ) as w:
+                r = _simulate(cfg, policy, n_columns, seed)
             results[(m.value, policy.value)] = r
             emit(
                 f"retention.{m.value}.{policy.value}",
-                (time.time() - t0) * 1e6 / max(len(results), 1),
+                w.us,
                 f"rms_final={r['final_rms_cell_lsb']:.3f} "
                 f"E_maint_nj={r['total_maintenance_energy_pj'] / 1e3:.0f} "
                 f"reprog={sum(s['reprogrammed'] for s in r['series'])}",
@@ -140,6 +141,7 @@ def main(n_columns: int = 192, seed: int = 0) -> dict:
             {f"{k[0]}.{k[1]}": v for k, v in results.items()}, indent=1
         )
     )
+    export_trace("retention")
 
     for m in ("hd_pv", "harp"):
         none_r = results[(m, "none")]

@@ -95,6 +95,11 @@ def main(argv: list[str] | None = None) -> None:
     for name, module, attr, kwargs in selected:
         kw = dict(kwargs, quick=True) if args.quick else kwargs
         try:
+            # Lazy import (keeps --list jax-free): fresh telemetry per
+            # benchmark, so each exported TRACE_*.json is self-contained.
+            from repro import obs  # noqa: PLC0415
+
+            obs.reset_all()
             _resolve(module, attr)(**kw)
         except Exception:
             traceback.print_exc()

@@ -39,7 +39,7 @@ from repro.lifetime.refresh import RefreshConfig, RefreshPolicy
 from repro.models import ModelConfig, init_params
 from repro.serving import ContinuousScheduler, ServeEngine, poisson_requests
 
-from .common import emit
+from .common import emit, export_trace
 
 OUT = os.path.join(os.path.dirname(__file__), "BENCH_serving.json")
 OUT_QUICK = os.path.join(os.path.dirname(__file__), "BENCH_serving_quick.json")
@@ -202,6 +202,7 @@ def main(quick: bool = False) -> dict:
     path = OUT_QUICK if quick else OUT
     with open(path, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
+    export_trace("serving", quick)
     top_d = rows_d[-1]["tokens_per_s"]
     top_a = rows_a[-1]["tokens_per_s"]
     emit(

@@ -30,6 +30,7 @@ from typing import Any, Callable
 
 import jax
 
+from repro import obs
 from repro.core.cost import inference_token_cost
 from repro.core.programmer import DeployedModel
 
@@ -96,6 +97,7 @@ class CIMExecutor:
         self._uids = {
             name: i for i, name in enumerate(sorted(deployed.arrays))
         }
+        self._token_cost: tuple[float, float] | None = None
         self._reads: dict[str, float] = {}
         for name, state in deployed.arrays.items():
             if predicate(name, state):
@@ -153,13 +155,25 @@ class CIMExecutor:
 
         Every token reads every analog array's physical columns
         `planes_per_token` times (each DAC plane is one read phase of
-        every macro the leaf spans).
+        every macro the leaf spans).  Each tick also attributes the
+        modeled per-token cost to the `serve.analog` ledger phase —
+        pure host floats (the cached `token_cost`), never a sync.
         """
         self.access += 1
         self.tokens_served += n_tokens
         reads = float(n_tokens * self.planes)
         for name in self._reads:
             self._reads[name] += reads
+        obs.registry.inc("cim.tokens", n_tokens)
+        obs.registry.inc("cim.accesses")
+        lat_ns, en_pj = self.token_cost()
+        obs.charge(
+            "serve.analog",
+            tokens=n_tokens,
+            energy_pj=en_pj * n_tokens,
+            latency_ns=lat_ns * n_tokens,
+            reads=reads * len(self._analog),
+        )
         return self.params()
 
     # ------------------------------------------------- traffic / costs
@@ -183,15 +197,22 @@ class CIMExecutor:
         return conv, drives
 
     def token_cost(self) -> tuple[float, float]:
-        """(latency_ns, energy_pj) per served token, from the cost model."""
-        conv, drives = self._conversion_counts()
-        return inference_token_cost(
-            n_conversions=conv,
-            n_row_drives=drives,
-            planes=self.planes,
-            adc=self.deployed.wv_cfg.adc,
-            cost=self.deployed.cost,
-        )
+        """(latency_ns, energy_pj) per served token, from the cost model.
+
+        Cached after the first call: tile geometry is fixed for the
+        executor's lifetime (refresh re-tiles the same shapes), and
+        `tick` charges the ledger with it on every engine access.
+        """
+        if self._token_cost is None:
+            conv, drives = self._conversion_counts()
+            self._token_cost = inference_token_cost(
+                n_conversions=conv,
+                n_row_drives=drives,
+                planes=self.planes,
+                adc=self.deployed.wv_cfg.adc,
+                cost=self.deployed.cost,
+            )
+        return self._token_cost
 
     def summary(self) -> dict[str, float]:
         lat, en = self.token_cost()

@@ -28,7 +28,11 @@ the bucketed path bit-identical to the per-leaf path.
 The module also keeps two counters the benchmarks/tests assert on:
 `compile_count()` (distinct traced dispatch shapes — must stay <= the
 number of buckets) and `host_sync_count()` (`host_fetch` calls — a
-batched deploy performs exactly one).
+batched deploy performs exactly one).  Since the obs refactor
+(DESIGN.md Sec. 14) both live in the global telemetry registry
+(`repro.obs.metrics.registry`, keys ``pipeline.compiles`` /
+``pipeline.host_syncs``); the functions here are thin compatibility
+wrappers over it.
 """
 
 from __future__ import annotations
@@ -38,6 +42,9 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import obs
+from repro.obs import metrics as obs_metrics
 
 from . import device as dev_mod
 from . import rng
@@ -61,32 +68,30 @@ DEFAULT_MAX_BUCKET = 1 << 18
 
 _FN_CACHE: dict = {}
 _TRACED: set = set()
-_COMPILES = 0
-_HOST_SYNCS = 0
+
+# Registry keys for the pipeline's contract counters (obs.metrics).
+COMPILE_COUNTER = "pipeline.compiles"
+SYNC_COUNTER = "pipeline.host_syncs"
 
 
 def compile_count() -> int:
     """Distinct (config, bucket-shape) dispatches traced so far."""
-    return _COMPILES
+    return int(obs_metrics.value(COMPILE_COUNTER))
 
 
 def host_sync_count() -> int:
     """`host_fetch` device->host synchronizations performed so far."""
-    return _HOST_SYNCS
+    return int(obs_metrics.value(SYNC_COUNTER))
 
 
 def reset_counters() -> None:
-    """Zero the observability counters (the jit cache itself survives)."""
-    global _COMPILES, _HOST_SYNCS
-    _COMPILES = 0
-    _HOST_SYNCS = 0
+    """Zero the pipeline's registry counters (the jit cache survives)."""
+    obs_metrics.reset("pipeline.")
 
 
 def host_fetch(tree):
     """The pipeline's single device->host transfer point (counted)."""
-    global _HOST_SYNCS
-    _HOST_SYNCS += 1
-    return jax.device_get(tree)
+    return obs_metrics.fetch(tree, counter=SYNC_COUNTER)
 
 
 def donates() -> bool:
@@ -163,11 +168,14 @@ def get_program_fn(
         jfn = jax.jit(raw, **kw)
 
         def entry(key, targets, d2d, col_ids):
-            global _COMPILES
             tk = (cache_key, targets.shape)
             if tk not in _TRACED:
                 _TRACED.add(tk)
-                _COMPILES += 1
+                obs_metrics.inc(COMPILE_COUNTER)
+                obs.instant(
+                    "pipeline.compile", cat="pipeline",
+                    bucket=int(targets.shape[0]), n_cells=int(targets.shape[1]),
+                )
             return jfn(key, targets, d2d, col_ids)
 
         _FN_CACHE[cache_key] = entry
@@ -225,36 +233,41 @@ def program_packed_columns(
     d2d = sample_d2d_for(key, uids, (c_total, n), cfg.device)
 
     fn = get_program_fn(cfg, cost, mesh=mesh, mesh_axes=mesh_axes)
+    sizes_plan = bucket_sizes(c_total, min_bucket, max_bucket)
     g_parts, stat_parts = [], []
     off = 0
-    for size in bucket_sizes(c_total, min_bucket, max_bucket):
-        take = min(size, c_total - off)
-        tb = targets[off : off + take]
-        db = d2d[off : off + take]
-        ub = uids[off : off + take]
-        pad = size - take
-        if pad:
-            # Filler columns: zero targets, fresh uids past the real
-            # range (their streams never alias a real column's), unit
-            # d2d.  Their rows are sliced off below.
-            tb = jnp.pad(tb, ((0, pad), (0, 0)))
-            db = jnp.pad(db, ((0, pad), (0, 0)), constant_values=1.0)
-            ub = jnp.concatenate(
-                [ub, uid_base + c_total + jnp.arange(pad, dtype=jnp.int32)]
-            )
-        elif donates():
-            # A full-range slice short-circuits to the SAME array, so a
-            # single exact-size bucket would donate the caller's block
-            # (persistent ArrayState.targets) / the returned d2d.  Copy
-            # before donating in that case only.
-            if tb is targets:
-                tb = jnp.copy(tb)
-            if db is d2d:
-                db = jnp.copy(db)
-        g_b, st_b = fn(key, tb, db, ub)
-        g_parts.append(g_b[:take])
-        stat_parts.append(jax.tree.map(lambda x: x[:take], st_b))
-        off += take
+    with obs.span(
+        "deploy.program_columns", cat="pipeline",
+        columns=c_total, buckets=len(sizes_plan), blocks=len(blocks),
+    ):
+        for size in sizes_plan:
+            take = min(size, c_total - off)
+            tb = targets[off : off + take]
+            db = d2d[off : off + take]
+            ub = uids[off : off + take]
+            pad = size - take
+            if pad:
+                # Filler columns: zero targets, fresh uids past the real
+                # range (their streams never alias a real column's), unit
+                # d2d.  Their rows are sliced off below.
+                tb = jnp.pad(tb, ((0, pad), (0, 0)))
+                db = jnp.pad(db, ((0, pad), (0, 0)), constant_values=1.0)
+                ub = jnp.concatenate(
+                    [ub, uid_base + c_total + jnp.arange(pad, dtype=jnp.int32)]
+                )
+            elif donates():
+                # A full-range slice short-circuits to the SAME array, so a
+                # single exact-size bucket would donate the caller's block
+                # (persistent ArrayState.targets) / the returned d2d.  Copy
+                # before donating in that case only.
+                if tb is targets:
+                    tb = jnp.copy(tb)
+                if db is d2d:
+                    db = jnp.copy(db)
+            g_b, st_b = fn(key, tb, db, ub)
+            g_parts.append(g_b[:take])
+            stat_parts.append(jax.tree.map(lambda x: x[:take], st_b))
+            off += take
 
     g_all = jnp.concatenate(g_parts) if len(g_parts) > 1 else g_parts[0]
     stats_all = (

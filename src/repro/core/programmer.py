@@ -57,6 +57,7 @@ from repro.quant import (
     quantize_weight,
     unpack_columns,
 )
+from repro import obs
 from repro.quant.pack import PackedLayout
 
 from . import pipeline
@@ -85,6 +86,8 @@ class DeployReport:
     critical_latency_ns: float = 0.0  # max over columns = array wall-time
     total_energy_pj: float = 0.0
     rms_cell_error_lsb: float = 0.0
+    total_reads: float = 0.0          # verify ADC conversions/comparisons
+    total_write_pulses: float = 0.0
     leaves: dict[str, dict[str, float]] = dataclasses.field(default_factory=dict)
 
     @classmethod
@@ -112,6 +115,14 @@ class DeployReport:
             critical_latency_ns=jnp.max(lat),
             total_energy_pj=jnp.sum(en),
             rms_cell_error_lsb=jnp.sqrt(jnp.mean(rms2)),
+            # Telemetry sums (DESIGN.md Sec. 14) ride the same single
+            # fetch: device-side reductions, zero extra syncs.
+            total_reads=jnp.sum(
+                jnp.concatenate([s.reads for s in stats])
+            ),
+            total_write_pulses=jnp.sum(
+                jnp.concatenate([s.write_pulses for s in stats])
+            ),
         )
         per = {
             name: dict(
@@ -144,6 +155,8 @@ class DeployReport:
         en = float(jnp.sum(stats.energy_pj))
         it = float(jnp.mean(stats.iterations))
         rms = float(jnp.sqrt(jnp.mean(stats.rms_error_lsb**2)))
+        self.total_reads += float(jnp.sum(stats.reads))
+        self.total_write_pulses += float(jnp.sum(stats.write_pulses))
         self.leaves[name] = dict(
             columns=c, mean_iterations=it, critical_latency_ns=crit,
             energy_pj=en, rms_cell_error_lsb=rms,
@@ -379,22 +392,46 @@ def deploy_arrays(
         leaves.append(None)
 
     arrays: dict[str, ArrayState] = {}
-    if batched:
-        g_blocks, stats_blocks, d2d_blocks = pipeline.program_packed_columns(
-            key, [p.cols for p in plans], wv_cfg, cost,
-            mesh=mesh, min_bucket=min_bucket, max_bucket=max_bucket,
-        )
-        for plan, g, st, d2d in zip(plans, g_blocks, stats_blocks, d2d_blocks):
-            arrays[plan.name] = plan.state(g, d2d)
-        report = DeployReport.collect(
-            {p.name: s for p, s in zip(plans, stats_blocks)}, wv_cfg.n_cells
-        )
-    else:
-        report = DeployReport()
-        for plan in plans:
-            state, stats = _program_plan(key, plan, wv_cfg, cost)
-            report.merge(plan.name, stats, wv_cfg.n_cells)
-            arrays[plan.name] = state
+    with obs.span(
+        "deploy", cat="deploy", method=wv_cfg.method.value,
+        leaves=len(plans), batched=batched,
+    ) as sp:
+        if batched:
+            g_blocks, stats_blocks, d2d_blocks = pipeline.program_packed_columns(
+                key, [p.cols for p in plans], wv_cfg, cost,
+                mesh=mesh, min_bucket=min_bucket, max_bucket=max_bucket,
+            )
+            for plan, g, st, d2d in zip(plans, g_blocks, stats_blocks, d2d_blocks):
+                arrays[plan.name] = plan.state(g, d2d)
+            report = DeployReport.collect(
+                {p.name: s for p, s in zip(plans, stats_blocks)}, wv_cfg.n_cells
+            )
+        else:
+            report = DeployReport()
+            for plan in plans:
+                state, stats = _program_plan(key, plan, wv_cfg, cost)
+                report.merge(plan.name, stats, wv_cfg.n_cells)
+                arrays[plan.name] = state
+        sp["columns"] = report.num_columns
+        sp["rms_cell_error_lsb"] = report.rms_cell_error_lsb
+    # Telemetry attribution (DESIGN.md Sec. 14): all values above were
+    # already fetched by the report's host sync(s) — pure host floats.
+    obs.registry.fold(
+        {
+            "columns": report.num_columns,
+            "verify_reads": report.total_reads,
+            "write_pulses": report.total_write_pulses,
+        },
+        prefix="deploy.",
+    )
+    obs.charge(
+        "deploy",
+        energy_pj=report.total_energy_pj,
+        latency_ns=report.critical_latency_ns,
+        reads=report.total_reads,
+        method=wv_cfg.method.value,
+        columns=report.num_columns,
+    )
     return (
         DeployedModel(
             treedef=treedef, leaves=leaves, slots=slots, arrays=arrays,

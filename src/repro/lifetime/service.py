@@ -27,6 +27,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.programmer import DeployedModel
 
 from .drift import DriftConfig, advance, init_cell_state
@@ -183,29 +184,48 @@ class LifetimeSimulator:
             self._scrub_cursor = (start + max_leaves) % len(names)
         else:
             chosen = set(names)
-        for li, name in enumerate(names):
-            st = self.states[name]
-            k_adv, k_ref = jax.random.split(
-                jax.random.fold_in(jax.random.fold_in(self.key, self.epoch), li)
-            )
-            leaf_reads = float(reads_per_column) + float(traffic.get(name, 0.0))
-            applied_reads.append(leaf_reads)
-            st = advance(
-                k_adv, st, dt_s, leaf_reads, wv_cfg.device, self.drift_cfg
-            )
-            if name in chosen:
-                st, out = apply_refresh(
-                    k_ref, st, self.deployed.arrays[name].targets, wv_cfg, cost,
-                    self.drift_cfg, self.refresh_cfg, self.epoch,
+        with obs.span(
+            "lifetime.scrub", cat="lifetime", epoch=self.epoch,
+            scrubbed_leaves=len(chosen),
+        ) as sp:
+            for li, name in enumerate(names):
+                st = self.states[name]
+                k_adv, k_ref = jax.random.split(
+                    jax.random.fold_in(
+                        jax.random.fold_in(self.key, self.epoch), li
+                    )
                 )
-                if out.flagged is not None:
-                    flagged += int(out.flagged.sum())
-                reprogrammed += out.n_reprogrammed
-                en_v += out.verify_energy_pj
-                en_p += out.program_energy_pj
-                lat = max(lat, out.maintenance_latency_ns)  # leaves in parallel
-                pulses += out.write_pulses
-            self.states[name] = st
+                leaf_reads = float(reads_per_column) + float(
+                    traffic.get(name, 0.0)
+                )
+                applied_reads.append(leaf_reads)
+                st = advance(
+                    k_adv, st, dt_s, leaf_reads, wv_cfg.device, self.drift_cfg
+                )
+                if name in chosen:
+                    st, out = apply_refresh(
+                        k_ref, st, self.deployed.arrays[name].targets, wv_cfg,
+                        cost, self.drift_cfg, self.refresh_cfg, self.epoch,
+                    )
+                    if out.flagged is not None:
+                        flagged += int(out.flagged.sum())
+                    reprogrammed += out.n_reprogrammed
+                    en_v += out.verify_energy_pj
+                    en_p += out.program_energy_pj
+                    lat = max(lat, out.maintenance_latency_ns)  # in parallel
+                    pulses += out.write_pulses
+                self.states[name] = st
+            sp["flagged"] = flagged
+            sp["reprogrammed"] = reprogrammed
+        obs.registry.inc("lifetime.scrub_epochs")
+        obs.registry.inc("lifetime.reprogrammed_columns", reprogrammed)
+        obs.charge(
+            "lifetime.scrub",
+            energy_pj=en_v + en_p,
+            latency_ns=lat,
+            epoch=self.epoch,
+            reprogrammed=reprogrammed,
+        )
 
         self.t_s += dt_s
         self.epoch += 1

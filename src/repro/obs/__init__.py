@@ -1,0 +1,67 @@
+"""Unified telemetry: metrics, phase tracing, and the energy ledger.
+
+One observability substrate for the whole stack (DESIGN.md Sec. 14):
+
+* `obs.metrics`  — device-side `MetricAccumulator` pytrees riding
+  inside jitted hot paths + the host-side `MetricRegistry` of named
+  counters (the deploy pipeline's compile/host-sync counters live
+  here); `metrics.fetch` is the counted device->host chokepoint.
+* `obs.trace`    — host-side phase spans exported as Chrome/Perfetto
+  trace-event JSON (`trace.span` / `trace.instant` / `trace.export`).
+* `obs.ledger`   — per-phase energy/latency/reads/tokens attribution
+  from the circuit cost model (`obs.charge`), mirrored into the trace.
+* `obs.report`   — `python -m repro.obs.report TRACE.json` renders the
+  per-phase run summary table.
+
+The zero-extra-sync rule: spans/charges are host-side only, and device
+metrics are only fetched on host syncs the hot path already performs.
+`disabled()` silences trace/ledger recording (contract counters in the
+registry keep counting); `reset_all()` gives a fresh run in-process
+(benchmarks/run.py calls it between registered benchmarks).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from . import ledger, metrics, trace
+from .ledger import charge
+from .metrics import MetricAccumulator, registry
+from .trace import instant, span, tracer
+
+__all__ = [
+    "ledger",
+    "metrics",
+    "trace",
+    "charge",
+    "MetricAccumulator",
+    "registry",
+    "instant",
+    "span",
+    "tracer",
+    "disabled",
+    "reset_all",
+]
+
+
+@contextlib.contextmanager
+def disabled():
+    """Silence span/ledger recording inside the block.
+
+    Only *verbosity* is gated: registry counters (compile/host-sync
+    contracts) keep counting, and device-side accumulators keep riding
+    their dispatches — they are part of the compiled computation and
+    toggling them would retrace.
+    """
+    old = trace._set_enabled(False)
+    try:
+        yield
+    finally:
+        trace._set_enabled(old)
+
+
+def reset_all() -> None:
+    """Fresh telemetry state: events, charges, and counters all zeroed."""
+    trace.reset()
+    ledger.reset()
+    metrics.reset()

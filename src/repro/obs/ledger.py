@@ -1,0 +1,115 @@
+"""Energy / latency ledger: where did the joules and milliseconds go.
+
+The cost model prices individual operations — `CircuitCost` +
+`readout.cost.sweep_cost` price a verify sweep, `write_phase_cost` a
+write phase, `core.cost.inference_token_cost` a served token — but
+until now nothing attributed those prices to the *run*: a benchmark's
+deploy energy, a serving epoch's analog joules, a scrub's maintenance
+bill all lived in per-module report objects with different shapes.
+
+`EnergyLedger` is the one attribution sink.  Every subsystem charges
+its modeled cost to a named phase:
+
+    obs.charge("deploy",         energy_pj=..., latency_ns=..., reads=...)
+    obs.charge("serve.analog",   tokens=n, energy_pj=..., reads=...)
+    obs.charge("lifetime.scrub", energy_pj=..., latency_ns=...)
+
+Charges aggregate per phase (energy_pj / latency_ns / reads / tokens /
+n_charges) and — when tracing is enabled — mirror into the global
+tracer as `cat: "ledger"` instant events, so an exported trace file
+carries the full attribution and `repro.obs.report` can render
+per-phase reads/energy/latency next to the span wall times.
+
+Charging is pure host arithmetic on already-fetched floats: it can
+never add a host sync to a hot path.  Phase names should match the
+span names they annotate (e.g. the `lifetime.scrub` span and the
+`lifetime.scrub` charge join in the report table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from . import trace
+
+__all__ = ["EnergyLedger", "ledger", "charge", "summary", "reset", "FIELDS"]
+
+FIELDS = ("energy_pj", "latency_ns", "reads", "tokens")
+
+
+@dataclasses.dataclass
+class PhaseTotals:
+    """Accumulated attribution for one named phase."""
+
+    energy_pj: float = 0.0
+    latency_ns: float = 0.0
+    reads: float = 0.0
+    tokens: float = 0.0
+    n_charges: int = 0
+
+    def as_dict(self) -> dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+class EnergyLedger:
+    """Per-phase accumulation of modeled energy/latency/reads/tokens."""
+
+    def __init__(self):
+        self._phases: dict[str, PhaseTotals] = {}
+
+    def charge(
+        self,
+        phase: str,
+        *,
+        energy_pj: float = 0.0,
+        latency_ns: float = 0.0,
+        reads: float = 0.0,
+        tokens: float = 0.0,
+        **annotations,
+    ) -> None:
+        """Attribute modeled cost to `phase` (and mirror into the trace)."""
+        if not trace.is_enabled():
+            return
+        tot = self._phases.get(phase)
+        if tot is None:
+            tot = self._phases[phase] = PhaseTotals()
+        tot.energy_pj += float(energy_pj)
+        tot.latency_ns += float(latency_ns)
+        tot.reads += float(reads)
+        tot.tokens += float(tokens)
+        tot.n_charges += 1
+        trace.instant(
+            phase,
+            cat="ledger",
+            energy_pj=float(energy_pj),
+            latency_ns=float(latency_ns),
+            reads=float(reads),
+            tokens=float(tokens),
+            **annotations,
+        )
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        return {name: tot.as_dict() for name, tot in sorted(self._phases.items())}
+
+    def total(self, field: str = "energy_pj") -> float:
+        return sum(getattr(t, field) for t in self._phases.values())
+
+    def reset(self) -> None:
+        self._phases = {}
+
+
+# The global ledger (one process = one attribution namespace); reset
+# alongside the tracer/registry via `obs.reset_all()`.
+ledger = EnergyLedger()
+
+
+def charge(phase: str, **kw) -> None:
+    ledger.charge(phase, **kw)
+
+
+def summary() -> dict[str, dict[str, float]]:
+    return ledger.summary()
+
+
+def reset() -> None:
+    ledger.reset()

@@ -1,0 +1,159 @@
+"""Device-side metric accumulation + the host-side counter registry.
+
+Two halves, one rule — *instrumentation may not add host syncs or
+retraces* (DESIGN.md Sec. 14):
+
+* `MetricAccumulator` is a pytree of named device scalars that rides
+  *inside* jitted hot paths.  A step function takes it as an operand,
+  `inc()`s it with traced values, and returns it; shapes are static so
+  it can never retrace a warmed dispatch.  Its values come back to the
+  host only on a fetch the hot path was already paying — the serving
+  scheduler folds its per-step accumulator into the same
+  `jax.device_get` that fetches the decoded tokens, and the deploy
+  pipeline derives its totals from the `WVStats` arrays fetched by the
+  deploy's single `host_fetch`.
+
+* `MetricRegistry` is the host-side sum of everything fetched: named
+  float counters (`pipeline.compiles`, `pipeline.host_syncs`,
+  `serve.decode_tokens`, `cim.tokens`, ...).  `core.pipeline`'s
+  compile/host-sync counters live here now (the old
+  `pipeline.compile_count()` / `host_sync_count()` / `reset_counters()`
+  are thin wrappers).  Registry counters are contract-bearing
+  (benchmarks hard-assert on them), so they are NOT gated on the obs
+  enable flag — only trace/ledger verbosity is.
+
+`fetch(tree, counter=...)` is the counted device->host transfer
+chokepoint: one call = one sync = one bump of its counter.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "MetricAccumulator",
+    "MetricRegistry",
+    "registry",
+    "fetch",
+    "inc",
+    "value",
+    "snapshot",
+    "reset",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+class MetricAccumulator:
+    """An immutable pytree of named device-side metric scalars.
+
+    Functional by design: `inc` returns a NEW accumulator, so it
+    composes with jit/scan/while carries.  Names are static pytree aux
+    data — two accumulators with the same names have the same treedef,
+    which is what keeps a warmed dispatch from retracing.
+    """
+
+    def __init__(self, values: Mapping[str, jax.Array]):
+        self._values = dict(values)
+
+    @classmethod
+    def zeros(cls, names: Iterable[str]) -> "MetricAccumulator":
+        return cls({n: jnp.zeros((), jnp.float32) for n in names})
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._values))
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self._values[name]
+
+    def inc(self, name: str, delta) -> "MetricAccumulator":
+        """New accumulator with `delta` added to `name` (traced-safe)."""
+        vals = dict(self._values)
+        vals[name] = vals[name] + jnp.asarray(delta, jnp.float32)
+        return MetricAccumulator(vals)
+
+    def merge(self, other: "MetricAccumulator") -> "MetricAccumulator":
+        assert self.names == other.names, (self.names, other.names)
+        return MetricAccumulator(
+            {n: self._values[n] + other._values[n] for n in self._values}
+        )
+
+    def as_dict(self) -> dict[str, jax.Array]:
+        return dict(self._values)
+
+    # ------------------------------------------------------------ pytree
+    def tree_flatten(self):
+        names = self.names
+        return tuple(self._values[n] for n in names), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(dict(zip(names, children)))
+
+    def __repr__(self) -> str:
+        return f"MetricAccumulator({self._values!r})"
+
+
+class MetricRegistry:
+    """Host-side named counters: the sum of everything ever fetched."""
+
+    def __init__(self):
+        self._counts: dict[str, float] = {}
+
+    def inc(self, name: str, delta: float = 1.0) -> None:
+        self._counts[name] = self._counts.get(name, 0.0) + float(delta)
+
+    def fold(self, values: Mapping[str, Any], prefix: str = "") -> None:
+        """Add a mapping of fetched metric values (numpy/python scalars)."""
+        for k, v in values.items():
+            self.inc(prefix + k, float(v))
+
+    def value(self, name: str) -> float:
+        return self._counts.get(name, 0.0)
+
+    def snapshot(self) -> dict[str, float]:
+        return dict(self._counts)
+
+    def reset(self, prefix: str | None = None) -> None:
+        """Zero all counters, or only those under `prefix`."""
+        if prefix is None:
+            self._counts = {}
+        else:
+            for k in [k for k in self._counts if k.startswith(prefix)]:
+                del self._counts[k]
+
+
+# The global registry (one process = one counter namespace).
+registry = MetricRegistry()
+
+
+def fetch(tree: Any, counter: str | None = None) -> Any:
+    """The counted device->host transfer point.
+
+    One `fetch` call is exactly one host synchronization; `counter`
+    names the registry counter that bumps (e.g. the deploy pipeline's
+    `pipeline.host_syncs`).  Hot paths piggyback metric values on a
+    fetch they already perform — never add a `fetch` just for metrics.
+    """
+    if counter is not None:
+        registry.inc(counter)
+    return jax.device_get(tree)
+
+
+def inc(name: str, delta: float = 1.0) -> None:
+    registry.inc(name, delta)
+
+
+def value(name: str) -> float:
+    return registry.value(name)
+
+
+def snapshot() -> dict[str, float]:
+    return registry.snapshot()
+
+
+def reset(prefix: str | None = None) -> None:
+    registry.reset(prefix)

@@ -1,0 +1,143 @@
+"""Run-summary reporting over exported trace files.
+
+    python -m repro.obs.report benchmarks/TRACE_serving.json
+
+Loads a Chrome/Perfetto trace-event JSON written by `repro.obs.trace`
+and renders one table row per phase name: span count, wall time
+(total/mean), and the ledger attribution (energy, modeled latency,
+reads, tokens) charged to that phase.  This is the "where did the
+reads, joules, and milliseconds go" view of a run — the paper's
+latency/energy headline numbers, per phase, from one artifact.
+
+Pure stdlib (no jax import) so it runs anywhere, including the CI
+smoke step, which fails the build when a freshly emitted trace cannot
+be parsed or contains no spans.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any
+
+__all__ = ["load", "summarize", "render", "main"]
+
+_LEDGER_FIELDS = ("energy_pj", "latency_ns", "reads", "tokens")
+
+
+def load(path: str) -> dict[str, Any]:
+    """Read and validate a trace file; raises ValueError when malformed."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ValueError(f"cannot read trace {path!r}: {e}") from e
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        raise ValueError(f"{path!r} is not a trace-event file (no traceEvents)")
+    return doc
+
+
+def summarize(doc: dict[str, Any]) -> list[dict[str, Any]]:
+    """Aggregate events into one row per phase name.
+
+    Span ("ph": "X") events contribute count and wall time; ledger
+    instants ("cat": "ledger") contribute the charged energy/latency/
+    reads/tokens.  Rows join on the event name and sort by total wall
+    time (ledger-only phases last, by energy).
+    """
+    rows: dict[str, dict[str, Any]] = {}
+
+    def row(name: str) -> dict[str, Any]:
+        r = rows.get(name)
+        if r is None:
+            r = rows[name] = dict(
+                phase=name, count=0, total_ms=0.0,
+                **{f: 0.0 for f in _LEDGER_FIELDS},
+            )
+        return r
+
+    for ev in doc["traceEvents"]:
+        if not isinstance(ev, dict) or "name" not in ev:
+            continue
+        if ev.get("cat") == "ledger":
+            r = row(ev["name"])
+            args = ev.get("args") or {}
+            for f in _LEDGER_FIELDS:
+                r[f] += float(args.get(f, 0.0))
+        elif ev.get("ph") == "X":
+            r = row(ev["name"])
+            r["count"] += 1
+            r["total_ms"] += float(ev.get("dur", 0.0)) / 1e3
+    out = list(rows.values())
+    for r in out:
+        r["mean_ms"] = r["total_ms"] / r["count"] if r["count"] else 0.0
+    out.sort(key=lambda r: (-r["total_ms"], -r["energy_pj"], r["phase"]))
+    return out
+
+
+def _fmt(v: float) -> str:
+    if v == 0.0:
+        return "-"
+    if abs(v) >= 1e6:
+        return f"{v:.3e}"
+    return f"{v:,.2f}" if abs(v) < 1e3 else f"{v:,.0f}"
+
+
+def render(rows: list[dict[str, Any]]) -> str:
+    """Plain-text summary table (grep-able, fixed column order)."""
+    cols = ["phase", "count", "total_ms", "mean_ms", *_LEDGER_FIELDS]
+    table = [[str(c) for c in cols]]
+    for r in rows:
+        table.append(
+            [r["phase"], str(r["count"])]
+            + [_fmt(r[c]) for c in cols[2:]]
+        )
+    widths = [max(len(line[i]) for line in table) for i in range(len(cols))]
+    lines = []
+    for j, line in enumerate(table):
+        lines.append(
+            line[0].ljust(widths[0])
+            + "  "
+            + "  ".join(c.rjust(w) for c, w in zip(line[1:], widths[1:]))
+        )
+        if j == 0:
+            lines.append("-" * len(lines[0]))
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.obs.report",
+        description="Summarize an obs trace file per phase.",
+    )
+    ap.add_argument("trace", help="path to a TRACE_*.json trace-event file")
+    args = ap.parse_args(argv)
+
+    try:
+        doc = load(args.trace)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    rows = summarize(doc)
+    n_spans = sum(r["count"] for r in rows)
+    if n_spans == 0:
+        print(
+            f"error: {args.trace!r} contains no span events "
+            f"({len(doc['traceEvents'])} events total)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"# {args.trace}: {len(doc['traceEvents'])} events, {n_spans} spans")
+    print(render(rows))
+    total_e = sum(r["energy_pj"] for r in rows)
+    total_ms = sum(r["total_ms"] for r in rows)
+    print(
+        f"# total: {total_ms:,.1f} ms wall across spans, "
+        f"{total_e:,.1f} pJ attributed"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models import ModelConfig, decode_step, init_cache, prefill
 
 
@@ -97,20 +98,28 @@ class ServeEngine:
         """tokens: (B, S) prompt; returns (B, max_new) generated ids."""
         b, s = tokens.shape
         key = key if key is not None else jax.random.PRNGKey(0)
-        last, cache = self._prefill(self._access_params(b * s), {"tokens": tokens})
-        cur = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
-        outs = [cur]
-        done = jnp.zeros((b,), bool)
-        for i in range(max_new - 1):
-            key, sub = jax.random.split(key)
-            tok, _, cache = self._decode(
-                self._access_params(b), cache, {"tokens": cur}, sub
+        with obs.span(
+            "serve.generate", cat="serve", batch=b, prompt_len=s,
+            max_new=max_new,
+        ) as sp:
+            last, cache = self._prefill(
+                self._access_params(b * s), {"tokens": tokens}
             )
-            cur = tok[:, None]
-            if eos_id is not None:
-                done = done | (tok == eos_id)
-                if bool(jnp.all(done)):
-                    outs.append(cur)
-                    break
-            outs.append(cur)
-        return jnp.concatenate(outs, axis=1)
+            cur = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+            outs = [cur]
+            done = jnp.zeros((b,), bool)
+            for i in range(max_new - 1):
+                key, sub = jax.random.split(key)
+                tok, _, cache = self._decode(
+                    self._access_params(b), cache, {"tokens": cur}, sub
+                )
+                cur = tok[:, None]
+                if eos_id is not None:
+                    done = done | (tok == eos_id)
+                    if bool(jnp.all(done)):
+                        outs.append(cur)
+                        break
+                outs.append(cur)
+            out = jnp.concatenate(outs, axis=1)
+            sp["generated"] = int(out.shape[0] * out.shape[1])
+        return out

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import decode_step, init_cache, prefill, write_cache_slot
 
 __all__ = [
@@ -130,6 +131,10 @@ class ContinuousScheduler:
         `maintenance_every` steps (lifetime scrub epochs, metrics
         flushes).  Runs on the host between dispatches: it never blocks
         or reshapes the batch.
+      device_metrics: compute per-step metrics (active slots, greedy
+        agreement) inside the jitted decode and fetch them on the SAME
+        device_get as the tokens.  Token bits are identical either way;
+        the flag exists so tests can assert that.
     """
 
     def __init__(
@@ -143,6 +148,7 @@ class ContinuousScheduler:
         maintenance_fn: Callable[[], Any] | None = None,
         maintenance_every: int = 0,
         prefill_cost_steps: float = 1.0,
+        device_metrics: bool = True,
     ):
         self.engine = engine
         self.cfg = engine.cfg
@@ -159,6 +165,11 @@ class ContinuousScheduler:
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.maintenance_fn = maintenance_fn
         self.maintenance_every = maintenance_every
+        # Device-side decode metrics (obs, DESIGN.md Sec. 14): computed
+        # inside the jitted step and fetched on the SAME device_get as
+        # the tokens — never an extra sync, never a retrace (the flag is
+        # fixed per scheduler, so each jit has one stable output treedef).
+        self.device_metrics = bool(device_metrics)
 
         cache = init_cache(self.cfg, n_slots, max_len)
         if set(cache) != {"k", "v", "pos"}:
@@ -228,6 +239,7 @@ class ContinuousScheduler:
 
     def _build_decode(self):
         cfg, mesh = self.cfg, self.mesh
+        device_metrics = self.device_metrics
 
         def decode(params, cache, cur, rids, gens, master):
             self.trace_counts["decode"] += 1  # fires at trace time only
@@ -238,7 +250,22 @@ class ContinuousScheduler:
             toks = jax.vmap(
                 lambda l, r, g: self._select_token(l, master, r, g)
             )(last, rids, gens)
-            return toks.astype(jnp.int32), cache
+            toks = toks.astype(jnp.int32)
+            # Step metrics ride the token fetch (never their own sync).
+            # The token computation above is untouched either way, so
+            # served bits are identical with metrics on or off.
+            m = {}
+            if device_metrics:
+                active = rids >= 0
+                n_active = jnp.sum(active).astype(jnp.float32)
+                greedy = jnp.argmax(last, axis=-1).astype(jnp.int32)
+                m = {
+                    "decode_active_slots": n_active,
+                    "decode_greedy_agree": jnp.sum(
+                        active & (toks == greedy)
+                    ).astype(jnp.float32),
+                }
+            return toks, m, cache
 
         return decode
 
@@ -301,23 +328,28 @@ class ContinuousScheduler:
                 f"exceeds max_len {self.max_len}"
             )
         bucket = self.bucket_len(plen)
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, :plen] = np.asarray(req.prompt, np.int32)
-        params = self.engine.access_params(bucket)  # physical prefill tokens
-        with jax.transfer_guard_device_to_host("disallow"):
-            tok, self.cache = self._admit_jit(
-                params,
-                jnp.asarray(padded),
-                jnp.asarray([plen], jnp.int32),
-                jnp.int32(req.rid),
-                self.key,
-                self.cache,
-                jnp.int32(slot),
-            )
-        tok = int(jax.device_get(tok))  # the one (small) admit sync
+        with obs.span(
+            "serve.admit", cat="serve", rid=req.rid, bucket=bucket, slot=slot
+        ):
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :plen] = np.asarray(req.prompt, np.int32)
+            params = self.engine.access_params(bucket)  # physical prefill toks
+            with jax.transfer_guard_device_to_host("disallow"):
+                tok, self.cache = self._admit_jit(
+                    params,
+                    jnp.asarray(padded),
+                    jnp.asarray([plen], jnp.int32),
+                    jnp.int32(req.rid),
+                    self.key,
+                    self.cache,
+                    jnp.int32(slot),
+                )
+            tok = int(jax.device_get(tok))  # the one (small) admit sync
         self.admit_syncs += 1
         self.admits += 1
         self.prefill_tokens += bucket
+        obs.registry.inc("serve.admits")
+        obs.registry.inc("serve.prefill_tokens", bucket)
         self._rid[slot] = req.rid
         self._gen[slot] = 0
         self._slot_req[slot] = req
@@ -340,22 +372,31 @@ class ContinuousScheduler:
         path (a stray `float()`/`np.asarray` on a device value) raises
         instead of silently serializing the loop.
         """
-        params = self.engine.access_params(self.n_slots)
-        with jax.transfer_guard_device_to_host("disallow"):
-            toks, self.cache = self._decode_jit(
-                params,
-                self.cache,
-                jnp.asarray(self._cur),
-                jnp.asarray(self._rid),
-                jnp.asarray(self._gen),
-                self.key,
-            )
-        toks = np.asarray(jax.device_get(toks))  # THE per-step host sync
-        self.host_syncs += 1
-        self.decode_steps += 1
-        for slot in np.flatnonzero(self._rid >= 0):
-            # a decode-emitted token completes at the END of this step
-            self._emit(int(slot), int(toks[slot]), self.now + 1.0)
+        with obs.span("serve.decode", cat="serve") as sp:
+            params = self.engine.access_params(self.n_slots)
+            with jax.transfer_guard_device_to_host("disallow"):
+                toks, m, self.cache = self._decode_jit(
+                    params,
+                    self.cache,
+                    jnp.asarray(self._cur),
+                    jnp.asarray(self._rid),
+                    jnp.asarray(self._gen),
+                    self.key,
+                )
+            # THE per-step host sync: tokens AND step metrics, one fetch.
+            toks, m = jax.device_get((toks, m))
+            toks = np.asarray(toks)
+            self.host_syncs += 1
+            self.decode_steps += 1
+            obs.registry.inc("serve.decode_steps")
+            obs.registry.fold(m, prefix="serve.")
+            emitted = 0
+            for slot in np.flatnonzero(self._rid >= 0):
+                # a decode-emitted token completes at the END of this step
+                self._emit(int(slot), int(toks[slot]), self.now + 1.0)
+                emitted += 1
+            obs.registry.inc("serve.decode_tokens", emitted)
+            sp["tokens"] = emitted
 
     def warmup(
         self,
@@ -441,28 +482,35 @@ class ContinuousScheduler:
         )
         t0 = time.perf_counter()
         steps0 = self.decode_steps
-        while pending or self.active_slots():
-            while (
-                pending
-                and pending[0].arrival <= self.now
-                and self._free_slot() is not None
-            ):
-                self.admit(pending.popleft())
-            if not self.active_slots():
-                if not pending:  # last request completed at admission
+        with obs.span(
+            "serve.run", cat="serve", requests=len(requests),
+            n_slots=self.n_slots,
+        ) as sp:
+            while pending or self.active_slots():
+                while (
+                    pending
+                    and pending[0].arrival <= self.now
+                    and self._free_slot() is not None
+                ):
+                    self.admit(pending.popleft())
+                if not self.active_slots():
+                    if not pending:  # last request completed at admission
+                        break
+                    self.now = max(self.now, pending[0].arrival)
+                    continue
+                self.step()
+                self.now += 1.0
+                if (
+                    self.maintenance_fn is not None
+                    and self.maintenance_every > 0
+                    and self.decode_steps % self.maintenance_every == 0
+                ):
+                    with obs.span("serve.maintenance", cat="serve"):
+                        self.maintenance_fn()
+                if self.decode_steps - steps0 >= max_steps:
                     break
-                self.now = max(self.now, pending[0].arrival)
-                continue
-            self.step()
-            self.now += 1.0
-            if (
-                self.maintenance_fn is not None
-                and self.maintenance_every > 0
-                and self.decode_steps % self.maintenance_every == 0
-            ):
-                self.maintenance_fn()
-            if self.decode_steps - steps0 >= max_steps:
-                break
+            sp["decode_steps"] = self.decode_steps - steps0
+            sp["completed"] = len(self.completed)
         self.wall_s += time.perf_counter() - t0
         return sorted(self.completed, key=lambda r: r.rid)
 
