@@ -36,6 +36,7 @@ REGISTRY: list[tuple[str, str, str, dict]] = [
     ("cim.inference", "cim_inference", "main", {}),
     ("readout.sweep", "readout_sweep", "main", {}),
     ("serving.traffic", "serving_traffic", "main", {}),
+    ("fault.tolerance", "fault_tolerance", "main", {}),
 ]
 
 # Benchmarks whose entry accepts quick=True (CI smoke mode).
@@ -44,6 +45,7 @@ QUICK_CAPABLE = {
     "cim.inference",
     "readout.sweep",
     "serving.traffic",
+    "fault.tolerance",
 }
 
 

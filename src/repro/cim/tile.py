@@ -177,9 +177,19 @@ def build_weight(
     ``fold_in(key, layer)``); other shapes tile the flattened (K, M) view
     directly.  The tiles alias the live `g`: rebuilding after lifetime
     drift re-views the aged conductances.
+
+    Spare-column remap (DESIGN.md Sec. 15): a state carrying a
+    `RemapTable` holds PHYSICAL (C + S) rows; served traffic must see
+    the repaired logical geometry, so the perm gather is applied before
+    the slice re-view (getattr: golden/duck-typed states predate the
+    field).
     """
     layout: PackedLayout = state.layout
-    g_pos, g_neg = slice_planes(state.g, layout)
+    g = state.g
+    remap = getattr(state, "remap", None)
+    if remap is not None:
+        g = g[remap.perm]
+    g_pos, g_neg = slice_planes(g, layout)
     stacked = len(state.shape) == 3
     if stacked:
         n_layers = int(state.shape[0])

@@ -16,11 +16,13 @@ All quantities are in cell-LSB units (see core.types).
 
 from __future__ import annotations
 
+from typing import NamedTuple, Optional
+
 import jax
 import jax.numpy as jnp
 
 from . import rng
-from .types import DeviceConfig
+from .types import DeviceConfig, FaultConfig
 
 __all__ = [
     "sample_d2d",
@@ -28,6 +30,10 @@ __all__ = [
     "initial_state",
     "write_noise_sigma",
     "sample_write_noise",
+    "FaultMap",
+    "sample_fault_map",
+    "empty_fault_map",
+    "clamp_stuck",
 ]
 
 
@@ -78,6 +84,143 @@ def initial_state(shape) -> jax.Array:
     return jnp.zeros(shape, jnp.float32)
 
 
+class FaultMap(NamedTuple):
+    """Static per-cell silicon fault state (DESIGN.md Sec. 15).
+
+    The fault map is physical device state, like `d2d`: it is sampled
+    once per deployment (caller side) and passed into every programming
+    dispatch that touches the same cells — refresh re-programs under the
+    *same* map, never a fresh draw.
+
+    stuck:   (..., N) bool  — cell does not respond to pulses at all.
+    stuck_g: (..., N) f32   — the conductance a stuck cell is pinned at
+                              (0 for SA0/HRS, G_max for SA1/LRS, a random
+                              level for endurance-exhausted cells).
+    efficiency: (..., N) f32 — multiplicative step-efficiency factor
+                              (1.0 healthy; `weak_efficiency` for weak
+                              cells; x tile/chip systematic spread).
+    """
+
+    stuck: jax.Array
+    stuck_g: jax.Array
+    efficiency: jax.Array
+
+
+def empty_fault_map(shape) -> FaultMap:
+    """The inert map: nothing stuck, unit efficiency (used as pad)."""
+    return FaultMap(
+        stuck=jnp.zeros(shape, bool),
+        stuck_g=jnp.zeros(shape, jnp.float32),
+        efficiency=jnp.ones(shape, jnp.float32),
+    )
+
+
+# Salts carving fault sampling into its own key domain: the existing
+# d2d/coarse/fine key schedule (DESIGN.md Sec. 10) is untouched, so a
+# deployment that samples a fault map draws identical write noise to one
+# that does not.
+_FAULT_SALT = 0xFA0175
+_TILE_SALT = 0x711E5
+_CHIP_SALT = 0xC419
+
+
+def tile_ids(col_ids: jax.Array, fault_cfg: FaultConfig) -> jax.Array:
+    """Physical tile index of each column uid (geometry is static)."""
+    return col_ids // fault_cfg.columns_per_tile
+
+
+def chip_ids(col_ids: jax.Array, fault_cfg: FaultConfig) -> jax.Array:
+    return tile_ids(col_ids, fault_cfg) // fault_cfg.tiles_per_chip
+
+
+def tile_quality(
+    key: jax.Array, tids: jax.Array, fault_cfg: FaultConfig
+) -> jax.Array:
+    """Per-tile fault-rate multiplier (lognormal, sigma in decades).
+
+    Deterministic in (master key, tile id): the factory-probe pass and
+    the deploy-time fault sampler both call this and see the same
+    silicon.  1.0 everywhere when sigma_tile_fault_dec == 0.
+    """
+    fkey = jax.random.fold_in(key, _FAULT_SALT)
+    tkey = rng.fold_col_keys(jax.random.fold_in(fkey, _TILE_SALT), tids)
+    ln10 = 2.302585092994046
+    z = jax.vmap(lambda k: jax.random.normal(k, ()))(tkey)
+    return jnp.exp(fault_cfg.sigma_tile_fault_dec * ln10 * z)
+
+
+def sample_fault_map(
+    key: jax.Array,
+    col_ids: jax.Array,
+    shape,
+    fault_cfg: FaultConfig,
+    dev: DeviceConfig,
+) -> FaultMap:
+    """Sample the static fault state for a batch of physical columns.
+
+    `key` is the deployment master key (a *single* key — per-column
+    sub-streams are derived inside from `col_ids`, so a column's fault
+    draw depends only on (master key, uid): bucketed and per-leaf
+    deploys see identical silicon).  `shape` is (C, N) with
+    C == col_ids.shape[0].
+
+    Spatial correlation: per-tile lognormal fault-rate multiplier and
+    per-tile / per-chip Gaussian step-efficiency offsets are derived by
+    folding the (deterministic) tile/chip ids into salted sub-keys —
+    columns sharing a tile share the draw, and the draw is independent
+    of which columns ride in the batch.
+    """
+    assert shape[0] == col_ids.shape[0], (shape, col_ids.shape)
+    fkey = jax.random.fold_in(key, _FAULT_SALT)
+    ckeys = rng.fold_col_keys(fkey, col_ids)
+    k_kind, k_level = rng.split(ckeys)
+
+    tids = tile_ids(col_ids, fault_cfg)
+    cids = chip_ids(col_ids, fault_cfg)
+    rate_mult = tile_quality(key, tids, fault_cfg)[:, None]  # (C, 1)
+
+    # One uniform per cell classifies it into {healthy, SA0, SA1, weak,
+    # exhausted} by stacked thresholds; the tile multiplier scales all
+    # fault probabilities together (bad tiles are bad in every mode).
+    u = rng.uniform(k_kind, shape)
+    p0 = jnp.float32(fault_cfg.p_stuck_hrs) * rate_mult
+    p1 = p0 + jnp.float32(fault_cfg.p_stuck_lrs) * rate_mult
+    p2 = p1 + jnp.float32(fault_cfg.p_weak) * rate_mult
+    p3 = p2 + jnp.float32(fault_cfg.p_exhausted) * rate_mult
+    sa0 = u < p0
+    sa1 = (u >= p0) & (u < p1)
+    weak = (u >= p1) & (u < p2)
+    exhausted = (u >= p2) & (u < p3)
+
+    # Endurance-exhausted cells are frozen wherever they last landed:
+    # a uniform level in [0, G_max].
+    level = rng.uniform(k_level, shape) * dev.g_max_lsb
+    stuck = sa0 | sa1 | exhausted
+    stuck_g = jnp.where(sa1, dev.g_max_lsb, jnp.where(exhausted, level, 0.0))
+
+    # Systematic step-efficiency spread shared per tile / per chip.
+    eff = jnp.where(weak, jnp.float32(fault_cfg.weak_efficiency), 1.0)
+    if fault_cfg.sigma_tile_eff_frac > 0.0:
+        tkeys = rng.fold_col_keys(
+            jax.random.fold_in(fkey, _TILE_SALT + 1), tids)
+        zt = jax.vmap(lambda k: jax.random.normal(k, ()))(tkeys)
+        eff = eff * (1.0 + fault_cfg.sigma_tile_eff_frac * zt[:, None])
+    if fault_cfg.sigma_chip_eff_frac > 0.0:
+        qkeys = rng.fold_col_keys(jax.random.fold_in(fkey, _CHIP_SALT), cids)
+        zc = jax.vmap(lambda k: jax.random.normal(k, ()))(qkeys)
+        eff = eff * (1.0 + fault_cfg.sigma_chip_eff_frac * zc[:, None])
+    eff = jnp.maximum(eff, 0.0)
+
+    return FaultMap(stuck=stuck, stuck_g=stuck_g, efficiency=eff)
+
+
+def clamp_stuck(g: jax.Array, fault: Optional[FaultMap]) -> jax.Array:
+    """Pin stuck cells at their physical level (no-op without a map)."""
+    if fault is None:
+        return g
+    return jnp.where(fault.stuck, fault.stuck_g, g)
+
+
 def _effective_step(
     g: jax.Array, direction: jax.Array, dev: DeviceConfig, step_lsb: float
 ) -> jax.Array:
@@ -103,6 +246,7 @@ def apply_pulses(
     dev: DeviceConfig,
     step_lsb: float | None = None,
     noise_scale: float = 1.0,
+    fault: Optional[FaultMap] = None,
 ) -> jax.Array:
     """Apply a burst of identical pulses to every cell (vectorized write phase).
 
@@ -115,6 +259,10 @@ def apply_pulses(
       dev: device config.
       step_lsb: nominal step per pulse (defaults to the fine step).
       noise_scale: multiplier on sigma_map (coarse pulses are noisier).
+      fault: optional static :class:`FaultMap`; weak cells see collapsed
+        step efficiency, stuck cells are re-pinned after the write.  The
+        noise draw is unconditional, so `fault=None` and an inert map
+        produce bit-identical conductances.
 
     Returns updated conductances, clipped to [0, G_max].
     """
@@ -128,10 +276,11 @@ def apply_pulses(
     c2c, nmap = sample_write_noise(key, g.shape, dev, step_lsb)
     n = n_pulses.astype(jnp.float32)
     pulsed = n > 0
-    step = _effective_step(g, direction, dev, step_lsb) * d2d
+    eff = d2d if fault is None else d2d * fault.efficiency
+    step = _effective_step(g, direction, dev, step_lsb) * eff
     delta = direction.astype(jnp.float32) * step * n * c2c
     if dev.map_noise_mode == "pulse":
         nmap = nmap * jnp.sqrt(jnp.maximum(n, 1.0))
     g_new = g + delta + jnp.where(pulsed, nmap * noise_scale, 0.0)
     g_new = jnp.clip(g_new, 0.0, dev.g_max_lsb)
-    return jnp.where(pulsed, g_new, g)
+    return clamp_stuck(jnp.where(pulsed, g_new, g), fault)

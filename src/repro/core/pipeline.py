@@ -49,7 +49,7 @@ from repro.obs import metrics as obs_metrics
 from . import device as dev_mod
 from . import rng
 from .cost import CircuitCost
-from .types import WVConfig
+from .types import FaultConfig, WVConfig
 from .wv import WVStats, program_columns
 
 __all__ = [
@@ -136,6 +136,7 @@ def get_program_fn(
     cost: CircuitCost,
     mesh: Mesh | None = None,
     mesh_axes: tuple | None = None,
+    with_fault: bool = False,
 ):
     """The shared batched-programming dispatch: (key, targets, d2d, col_ids).
 
@@ -145,15 +146,28 @@ def get_program_fn(
     `mesh` is given the column axis is sharded over `mesh_axes`
     (default: all mesh axes) with zero cross-device traffic inside the
     WV loop.
+
+    With `with_fault=True` the callable takes a trailing
+    :class:`device.FaultMap` of (C, N) leaves (persistent silicon state
+    — never donated) and programs under it.  Fault-free dispatches keep
+    their own cache entry, so turning faults on never invalidates the
+    warm zero-fault compile.
     """
-    cache_key = (cfg, cost, mesh, mesh_axes)
+    cache_key = (cfg, cost, mesh, mesh_axes, with_fault)
     entry = _FN_CACHE.get(cache_key)
     if entry is None:
 
-        def raw(key, targets, d2d, col_ids):
-            return program_columns(
-                key, targets, cfg, cost=cost, d2d=d2d, col_ids=col_ids
-            )
+        if with_fault:
+            def raw(key, targets, d2d, col_ids, fault):
+                return program_columns(
+                    key, targets, cfg, cost=cost, d2d=d2d, col_ids=col_ids,
+                    fault=fault,
+                )
+        else:
+            def raw(key, targets, d2d, col_ids):
+                return program_columns(
+                    key, targets, cfg, cost=cost, d2d=d2d, col_ids=col_ids
+                )
 
         kw: dict = {}
         if donates():
@@ -163,11 +177,14 @@ def get_program_fn(
             col2 = NamedSharding(mesh, P(ax, None))
             col1 = NamedSharding(mesh, P(ax))
             rep = NamedSharding(mesh, P())
-            kw["in_shardings"] = (rep, col2, col2, col1)
+            ins = (rep, col2, col2, col1)
+            if with_fault:
+                ins = ins + (dev_mod.FaultMap(col2, col2, col2),)
+            kw["in_shardings"] = ins
             kw["out_shardings"] = (col2, col1)  # prefix: all WVStats leaves
         jfn = jax.jit(raw, **kw)
 
-        def entry(key, targets, d2d, col_ids):
+        def entry(key, targets, d2d, col_ids, *fault):
             tk = (cache_key, targets.shape)
             if tk not in _TRACED:
                 _TRACED.add(tk)
@@ -176,7 +193,7 @@ def get_program_fn(
                     "pipeline.compile", cat="pipeline",
                     bucket=int(targets.shape[0]), n_cells=int(targets.shape[1]),
                 )
-            return jfn(key, targets, d2d, col_ids)
+            return jfn(key, targets, d2d, col_ids, *fault)
 
         _FN_CACHE[cache_key] = entry
     return entry
@@ -201,7 +218,13 @@ def program_packed_columns(
     min_bucket: int = DEFAULT_MIN_BUCKET,
     max_bucket: int = DEFAULT_MAX_BUCKET,
     uid_base: int = 0,
-) -> tuple[list[jax.Array], list[WVStats], list[jax.Array]]:
+    uids: jax.Array | None = None,
+    pad_uid_base: int | None = None,
+    fault_cfg: FaultConfig | None = None,
+) -> tuple[
+    list[jax.Array], list[WVStats], list[jax.Array],
+    list[dev_mod.FaultMap] | list[None],
+]:
     """Program many packed column blocks in a few bucketed dispatches.
 
     Args:
@@ -212,27 +235,58 @@ def program_packed_columns(
       min_bucket / max_bucket: power-of-two bucket bounds.
       uid_base: first column uid (block b's column j gets uid
         ``uid_base + sum(C_<b) + j``) — must match the per-leaf path's
-        numbering for bit-identical results.
+        numbering for bit-identical results.  Filler uids for bucket
+        padding start at ``uid_base + c_total``.
+      uids: optional explicit (sum C_i,) int32 column uids overriding
+        the contiguous numbering — the spare-column pass programs
+        non-contiguous physical columns (`core.remap`).
+      pad_uid_base: first filler uid (defaults to ``uid_base +
+        c_total``); with explicit `uids` pass a value past the whole
+        allocated uid range.
+      fault_cfg: optional fault population; when set (and non-trivial),
+        the silicon fault map is sampled per uid (same master key — a
+        bucketed and a per-leaf deploy see the same silicon) and
+        programming runs under it.  Returned per block so callers can
+        persist it alongside d2d.
 
-    Returns (g_blocks, stats_blocks, d2d_blocks), all split back to the
-    input block boundaries.  Everything stays on device; no host syncs.
+    Returns (g_blocks, stats_blocks, d2d_blocks, fault_blocks), all
+    split back to the input block boundaries.  `fault_blocks` is a list
+    of None when no fault config is given.  Everything stays on device;
+    no host syncs.
     """
     if cost is None:
         cost = CircuitCost()
     sizes = [int(b.shape[0]) for b in blocks]
     c_total = sum(sizes)
     if c_total == 0:
-        return [], [], []
+        return [], [], [], []
     n = int(blocks[0].shape[1])
     targets = jnp.concatenate(blocks, axis=0) if len(blocks) > 1 else blocks[0]
     targets = targets.astype(jnp.float32)
-    uids = uid_base + jnp.arange(c_total, dtype=jnp.int32)
+    if uids is None:
+        uids = uid_base + jnp.arange(c_total, dtype=jnp.int32)
+    else:
+        uids = jnp.asarray(uids, jnp.int32)
+        assert uids.shape == (c_total,), (uids.shape, c_total)
+    if pad_uid_base is None:
+        pad_uid_base = uid_base + c_total
     # d2d is sampled OUTSIDE the donated dispatch: it is persistent array
     # state (ArrayState.d2d) while the padded bucket buffers are
     # temporaries.  Same sub-streams as the engine would use internally.
     d2d = sample_d2d_for(key, uids, (c_total, n), cfg.device)
+    # The fault map is persistent silicon state like d2d: sampled here
+    # (salted key domain — write-noise streams are untouched) and passed
+    # through every dispatch, never resampled inside.
+    with_fault = fault_cfg is not None and fault_cfg.any_faults
+    fault = (
+        dev_mod.sample_fault_map(key, uids, (c_total, n), fault_cfg, cfg.device)
+        if with_fault
+        else None
+    )
 
-    fn = get_program_fn(cfg, cost, mesh=mesh, mesh_axes=mesh_axes)
+    fn = get_program_fn(
+        cfg, cost, mesh=mesh, mesh_axes=mesh_axes, with_fault=with_fault
+    )
     sizes_plan = bucket_sizes(c_total, min_bucket, max_bucket)
     g_parts, stat_parts = [], []
     off = 0
@@ -245,16 +299,25 @@ def program_packed_columns(
             tb = targets[off : off + take]
             db = d2d[off : off + take]
             ub = uids[off : off + take]
+            fb = (
+                jax.tree.map(lambda x: x[off : off + take], fault)
+                if with_fault else None
+            )
             pad = size - take
             if pad:
                 # Filler columns: zero targets, fresh uids past the real
                 # range (their streams never alias a real column's), unit
-                # d2d.  Their rows are sliced off below.
+                # d2d, inert fault rows.  Their rows are sliced off below.
                 tb = jnp.pad(tb, ((0, pad), (0, 0)))
                 db = jnp.pad(db, ((0, pad), (0, 0)), constant_values=1.0)
                 ub = jnp.concatenate(
-                    [ub, uid_base + c_total + jnp.arange(pad, dtype=jnp.int32)]
+                    [ub, pad_uid_base + jnp.arange(pad, dtype=jnp.int32)]
                 )
+                if with_fault:
+                    filler = dev_mod.empty_fault_map((pad, n))
+                    fb = jax.tree.map(
+                        lambda x, f: jnp.concatenate([x, f]), fb, filler
+                    )
             elif donates():
                 # A full-range slice short-circuits to the SAME array, so a
                 # single exact-size bucket would donate the caller's block
@@ -264,7 +327,8 @@ def program_packed_columns(
                     tb = jnp.copy(tb)
                 if db is d2d:
                     db = jnp.copy(db)
-            g_b, st_b = fn(key, tb, db, ub)
+            fargs = (fb,) if with_fault else ()
+            g_b, st_b = fn(key, tb, db, ub, *fargs)
             g_parts.append(g_b[:take])
             stat_parts.append(jax.tree.map(lambda x: x[:take], st_b))
             off += take
@@ -275,11 +339,15 @@ def program_packed_columns(
         if len(stat_parts) > 1
         else stat_parts[0]
     )
-    g_blocks, stats_blocks, d2d_blocks = [], [], []
+    g_blocks, stats_blocks, d2d_blocks, fault_blocks = [], [], [], []
     off = 0
     for c_i in sizes:
         g_blocks.append(g_all[off : off + c_i])
         stats_blocks.append(jax.tree.map(lambda x: x[off : off + c_i], stats_all))
         d2d_blocks.append(d2d[off : off + c_i])
+        fault_blocks.append(
+            jax.tree.map(lambda x: x[off : off + c_i], fault)
+            if with_fault else None
+        )
         off += c_i
-    return g_blocks, stats_blocks, d2d_blocks
+    return g_blocks, stats_blocks, d2d_blocks, fault_blocks

@@ -49,6 +49,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.quant import (
     QuantConfig,
@@ -60,9 +61,11 @@ from repro.quant import (
 from repro import obs
 from repro.quant.pack import PackedLayout
 
+from . import device as dev_mod
 from . import pipeline
+from . import remap as remap_mod
 from .cost import CircuitCost
-from .types import WVConfig
+from .types import FaultConfig, WVConfig
 from .wv import WVStats
 
 __all__ = [
@@ -77,7 +80,15 @@ __all__ = [
 
 @dataclasses.dataclass
 class DeployReport:
-    """Aggregate WV statistics for one deployment."""
+    """Aggregate WV statistics for one deployment.
+
+    The give-up/remap fields ride the SAME single host sync as the rest
+    of the report (DESIGN.md Secs. 10/15): `total_gave_up_cells` counts
+    cells the bounded-retry budget declared unprogrammable,
+    `total_retry_pulses` the fine pulses burned on them before giving
+    up, and `remapped_columns` the primary columns repaired onto spares.
+    All three are zero on a fault-free / budget-less deploy.
+    """
 
     num_columns: int = 0
     num_cells: int = 0
@@ -88,11 +99,17 @@ class DeployReport:
     rms_cell_error_lsb: float = 0.0
     total_reads: float = 0.0          # verify ADC conversions/comparisons
     total_write_pulses: float = 0.0
+    total_gave_up_cells: float = 0.0  # cells declared unprogrammable
+    total_retry_pulses: float = 0.0   # pulses burned on gave-up cells
+    remapped_columns: int = 0         # primaries repaired onto spares
     leaves: dict[str, dict[str, float]] = dataclasses.field(default_factory=dict)
 
     @classmethod
     def collect(
-        cls, leaf_stats: "dict[str, WVStats]", n_cells: int
+        cls,
+        leaf_stats: "dict[str, WVStats]",
+        n_cells: int,
+        remapped: "dict[str, jax.Array] | None" = None,
     ) -> "DeployReport":
         """Device-side report accumulation with exactly ONE host sync.
 
@@ -123,6 +140,13 @@ class DeployReport:
             total_write_pulses=jnp.sum(
                 jnp.concatenate([s.write_pulses for s in stats])
             ),
+            # Give-up accounting (DESIGN.md Sec. 15) rides the same sync.
+            total_gave_up_cells=jnp.sum(
+                jnp.concatenate([s.gave_up for s in stats])
+            ),
+            total_retry_pulses=jnp.sum(
+                jnp.concatenate([s.retry_pulses for s in stats])
+            ),
         )
         per = {
             name: dict(
@@ -130,13 +154,15 @@ class DeployReport:
                 critical_latency_ns=jnp.max(s.latency_ns),
                 energy_pj=jnp.sum(s.energy_pj),
                 rms_cell_error_lsb=jnp.sqrt(jnp.mean(s.rms_error_lsb**2)),
+                gave_up_cells=jnp.sum(s.gave_up),
             )
             for name, s in leaf_stats.items()
         }
-        agg_h, per_h = pipeline.host_fetch((agg, per))
+        agg_h, per_h, rem_h = pipeline.host_fetch((agg, per, remapped or {}))
         report = cls(
             num_columns=sum(int(s.iterations.shape[0]) for s in stats),
             num_cells=sum(int(s.iterations.shape[0]) * n_cells for s in stats),
+            remapped_columns=int(sum(float(v) for v in rem_h.values())),
             **{k: float(v) for k, v in agg_h.items()},
         )
         report.leaves = {
@@ -146,6 +172,8 @@ class DeployReport:
             )
             for name, d in per_h.items()
         }
+        for name, v in rem_h.items():
+            report.leaves[name]["remapped_columns"] = float(v)
         return report
 
     def merge(self, name: str, stats: WVStats, n_cells: int) -> None:
@@ -157,6 +185,8 @@ class DeployReport:
         rms = float(jnp.sqrt(jnp.mean(stats.rms_error_lsb**2)))
         self.total_reads += float(jnp.sum(stats.reads))
         self.total_write_pulses += float(jnp.sum(stats.write_pulses))
+        self.total_gave_up_cells += float(jnp.sum(stats.gave_up))
+        self.total_retry_pulses += float(jnp.sum(stats.retry_pulses))
         self.leaves[name] = dict(
             columns=c, mean_iterations=it, critical_latency_ns=crit,
             energy_pj=en, rms_cell_error_lsb=rms,
@@ -187,15 +217,25 @@ class ArrayState:
     per-cell step-efficiency (a device property, so re-programming the
     same physical array must reuse it), `scale`/`layout`/`shape`/`dtype`
     invert the quantize/pack transform.
+
+    Faulty-silicon deploys (DESIGN.md Sec. 15) carry two extra pieces of
+    physical state: `fault` — the sampled per-cell `FaultMap`, reused by
+    every re-program of the same cells — and `remap` — the spare-column
+    `RemapTable`.  With a remap the per-column arrays are PHYSICAL
+    (C + S rows: C primaries then S spares) and the logical C-column
+    view is ``x[remap.perm]``; `layout` always describes the logical
+    geometry.
     """
 
-    g: jax.Array              # (C, N) programmed analog levels, LSB
-    targets: jax.Array        # (C, N) integer target levels, LSB
-    d2d: jax.Array            # (C, N) static per-cell step efficiency
+    g: jax.Array              # (C[+S], N) programmed analog levels, LSB
+    targets: jax.Array        # (C[+S], N) integer target levels, LSB
+    d2d: jax.Array            # (C[+S], N) static per-cell step efficiency
     scale: jax.Array          # per-channel quantization scale
     layout: PackedLayout
     shape: tuple[int, ...]    # original leaf shape
     dtype: Any
+    fault: dev_mod.FaultMap | None = None   # sampled silicon faults
+    remap: remap_mod.RemapTable | None = None  # spare-column repair view
 
     def materialize(self, dtype: Any | None = None) -> jax.Array:
         """Programmed conductances -> effective dense weight leaf.
@@ -204,7 +244,8 @@ class ArrayState:
         back in float32 regardless of the input dtype, so the analog
         error is not additionally rounded to a low-precision mantissa).
         """
-        q = unpack_columns(self.g, self.layout)
+        g = remap_mod.apply_remap(self.g, self.remap)
+        q = unpack_columns(g, self.layout)
         w = dequantize_weight(q, self.scale).reshape(self.shape)
         return w.astype(self.dtype if dtype is None else dtype)
 
@@ -255,10 +296,18 @@ class _LeafPlan:
     scale: jax.Array
     uid_base: int             # first global column uid of this leaf
 
-    def state(self, g: jax.Array, d2d: jax.Array) -> ArrayState:
+    def state(
+        self,
+        g: jax.Array,
+        d2d: jax.Array,
+        targets: jax.Array | None = None,
+        fault: dev_mod.FaultMap | None = None,
+        remap: remap_mod.RemapTable | None = None,
+    ) -> ArrayState:
         return ArrayState(
-            g=g, targets=self.cols, d2d=d2d, scale=self.scale,
-            layout=self.layout, shape=self.leaf.shape, dtype=self.leaf.dtype,
+            g=g, targets=self.cols if targets is None else targets, d2d=d2d,
+            scale=self.scale, layout=self.layout, shape=self.leaf.shape,
+            dtype=self.leaf.dtype, fault=fault, remap=remap,
         )
 
 
@@ -355,6 +404,9 @@ def deploy_arrays(
     mesh: Any | None = None,
     min_bucket: int = pipeline.DEFAULT_MIN_BUCKET,
     max_bucket: int = pipeline.DEFAULT_MAX_BUCKET,
+    fault_cfg: FaultConfig | None = None,
+    remap_cfg: remap_mod.RemapConfig | None = None,
+    sensitivity: Callable[[str, jax.Array], float] | None = None,
 ) -> tuple[DeployedModel, DeployReport]:
     """Program every eligible weight leaf, keeping persistent array state.
 
@@ -369,6 +421,16 @@ def deploy_arrays(
     sharded over `mesh`.  `batched=False` is the per-leaf baseline path
     (one dispatch + per-leaf host syncs); both paths draw per-column RNG
     sub-streams, so their results are bit-identical.
+
+    Faulty silicon (DESIGN.md Sec. 15, batched path only):
+    `fault_cfg` samples a per-cell `FaultMap` (persisted in each
+    `ArrayState`) and programs under it; `remap_cfg` provisions spare
+    columns per leaf and — after the primary pass — repairs the worst
+    columns (by `WVStats.gave_up`, so set `wv_cfg.give_up_pulses`) onto
+    them, with optional fault-aware placement steering leaves ranked by
+    `sensitivity(name, leaf)` onto the cleanest probed tiles.  All remap
+    decisions are device-side; the deploy still performs exactly one
+    host sync, with give-up/remap accounting riding it.
     """
     if q_cfg is None:
         q_cfg = QuantConfig(
@@ -376,6 +438,12 @@ def deploy_arrays(
         )
     if cost is None:
         cost = CircuitCost()
+    use_fault = fault_cfg is not None and fault_cfg.any_faults
+    use_remap = remap_cfg is not None and remap_cfg.spare_frac > 0.0
+    if (use_fault or use_remap) and not batched:
+        raise ValueError(
+            "fault_cfg/remap_cfg require the batched deployment path"
+        )
     records, treedef = _eligible_leaves(params, deploy_embeddings, predicate)
     leaves: list = []
     slots: dict[str, int] = {}
@@ -396,15 +464,103 @@ def deploy_arrays(
         "deploy", cat="deploy", method=wv_cfg.method.value,
         leaves=len(plans), batched=batched,
     ) as sp:
-        if batched:
-            g_blocks, stats_blocks, d2d_blocks = pipeline.program_packed_columns(
-                key, [p.cols for p in plans], wv_cfg, cost,
-                mesh=mesh, min_bucket=min_bucket, max_bucket=max_bucket,
+        if batched and not use_remap:
+            g_blocks, stats_blocks, d2d_blocks, fault_blocks = (
+                pipeline.program_packed_columns(
+                    key, [p.cols for p in plans], wv_cfg, cost,
+                    mesh=mesh, min_bucket=min_bucket, max_bucket=max_bucket,
+                    fault_cfg=fault_cfg if use_fault else None,
+                )
             )
-            for plan, g, st, d2d in zip(plans, g_blocks, stats_blocks, d2d_blocks):
-                arrays[plan.name] = plan.state(g, d2d)
+            for plan, g, st, d2d, fb in zip(
+                plans, g_blocks, stats_blocks, d2d_blocks, fault_blocks
+            ):
+                arrays[plan.name] = plan.state(g, d2d, fault=fb)
             report = DeployReport.collect(
                 {p.name: s for p, s in zip(plans, stats_blocks)}, wv_cfg.n_cells
+            )
+        elif batched:
+            # Two-pass spare-column deploy (DESIGN.md Sec. 15).  Pass A
+            # programs every leaf's primary columns; the worst columns
+            # (by give-up count) pick spare candidates DEVICE-SIDE; pass
+            # B programs the spares at their own physical uids; the
+            # remap table is decided device-side from both passes'
+            # stats.  One host sync total, in the report collect below.
+            c_counts = [int(p.cols.shape[0]) for p in plans]
+            s_counts = [remap_mod.n_spares(c, remap_cfg) for c in c_counts]
+            phys_counts = [c + s for c, s in zip(c_counts, s_counts)]
+            if remap_cfg.placement and use_fault:
+                sens = [
+                    sensitivity(p.name, p.leaf) if sensitivity is not None
+                    else 1.0 / max(pc, 1)
+                    for p, pc in zip(plans, phys_counts)
+                ]
+                uid_arrays = remap_mod.plan_placement(
+                    key, phys_counts, fault_cfg, sens,
+                    provision=remap_cfg.placement_provision,
+                )
+                uid_end = max(
+                    (int(u.max()) + 1 for u in uid_arrays if u.size), default=0
+                )
+            else:
+                uid_arrays, base = [], 0
+                for pc in phys_counts:
+                    uid_arrays.append(base + np.arange(pc, dtype=np.int32))
+                    base += pc
+                uid_end = base
+            prim_uids = np.concatenate(
+                [ua[:c] for ua, c in zip(uid_arrays, c_counts)]
+            )
+            spare_uids = np.concatenate(
+                [ua[c:] for ua, c in zip(uid_arrays, c_counts)]
+            )
+            fc = fault_cfg if use_fault else None
+            g_blocks, stats_blocks, d2d_blocks, fault_blocks = (
+                pipeline.program_packed_columns(
+                    key, [p.cols for p in plans], wv_cfg, cost,
+                    mesh=mesh, min_bucket=min_bucket, max_bucket=max_bucket,
+                    uids=prim_uids, pad_uid_base=uid_end, fault_cfg=fc,
+                )
+            )
+            cands = [
+                remap_mod.spare_candidates(st.gave_up, s)
+                for st, s in zip(stats_blocks, s_counts)
+            ]
+            sg_blocks, sstats_blocks, sd2d_blocks, sfault_blocks = (
+                pipeline.program_packed_columns(
+                    key,
+                    [p.cols[cand] for p, cand in zip(plans, cands)],
+                    wv_cfg, cost,
+                    mesh=mesh, min_bucket=min_bucket, max_bucket=max_bucket,
+                    uids=spare_uids, pad_uid_base=uid_end, fault_cfg=fc,
+                )
+            )
+            remapped: dict[str, jax.Array] = {}
+            combined: dict[str, WVStats] = {}
+            cat = lambda a, b: jnp.concatenate([a, b])  # noqa: E731
+            for plan, c, cand, g, st, d2d, fb, sg, sst, sd2d, sfb in zip(
+                plans, c_counts, cands, g_blocks, stats_blocks, d2d_blocks,
+                fault_blocks, sg_blocks, sstats_blocks, sd2d_blocks,
+                sfault_blocks,
+            ):
+                table = remap_mod.build_table(
+                    st.gave_up, cand, sst.gave_up, remap_cfg.min_gave_up
+                )
+                arrays[plan.name] = plan.state(
+                    cat(g, sg),
+                    cat(d2d, sd2d),
+                    targets=cat(plan.cols, plan.cols[cand]),
+                    fault=(
+                        jax.tree.map(cat, fb, sfb) if fb is not None else None
+                    ),
+                    remap=table,
+                )
+                combined[plan.name] = jax.tree.map(cat, st, sst)
+                remapped[plan.name] = jnp.sum(
+                    (~table.active[:c]).astype(jnp.float32)
+                )
+            report = DeployReport.collect(
+                combined, wv_cfg.n_cells, remapped=remapped
             )
         else:
             report = DeployReport()
@@ -421,6 +577,10 @@ def deploy_arrays(
             "columns": report.num_columns,
             "verify_reads": report.total_reads,
             "write_pulses": report.total_write_pulses,
+            # Contract-bearing give-up/remap counters (DESIGN.md Sec. 15).
+            "gave_up_cells": report.total_gave_up_cells,
+            "retry_pulses": report.total_retry_pulses,
+            "remapped_columns": report.remapped_columns,
         },
         prefix="deploy.",
     )
@@ -432,6 +592,23 @@ def deploy_arrays(
         method=wv_cfg.method.value,
         columns=report.num_columns,
     )
+    if report.total_gave_up_cells or report.remapped_columns:
+        # Ledger attribution of the bounded-retry waste: energy of the
+        # pulses burned on cells that were ultimately given up on,
+        # estimated at mid-scale conductance (the per-pulse energy model
+        # of cost.write_phase_cost, g = G_max/2).
+        e_pulse_pj = (
+            cost.v_set**2
+            * (wv_cfg.device.g_max_lsb / 2.0 * cost.g_lsb_us)
+            * cost.t_write_pulse_ns * 1e-3
+        )
+        obs.charge(
+            "deploy.give_up",
+            energy_pj=report.total_retry_pulses * e_pulse_pj,
+            gave_up_cells=report.total_gave_up_cells,
+            retry_pulses=report.total_retry_pulses,
+            remapped_columns=report.remapped_columns,
+        )
     return (
         DeployedModel(
             treedef=treedef, leaves=leaves, slots=slots, arrays=arrays,

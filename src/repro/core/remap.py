@@ -1,0 +1,215 @@
+"""Spare-column remapping and fault-aware placement (DESIGN.md Sec. 15).
+
+The right system response to unprogrammable cells is detection plus
+redundancy, not infinite retry (Hirtzlin et al. 1904.03652, Bocquet
+et al. 1902.02528).  This module owns the *placement* third of the
+fault-model ownership contract: the device samples faults
+(`core.device.sample_fault_map`), the WV engine decides give-up
+(`core.wv` bounded retry budget), and remap decides where weight lives:
+
+* **Spare-column remapping** — each leaf provisions
+  ``ceil(spare_frac * C)`` spare physical columns; after the primary
+  programming pass the worst columns (by `WVStats.gave_up`) are
+  re-targeted onto spares, and a `RemapTable` permutation makes served
+  traffic and scrubs see the repaired geometry.  Every decision is a
+  device-side jnp op on the still-on-device stats — remapping adds ZERO
+  host syncs to a deploy.
+* **Fault-aware placement** — a pre-deploy "factory probe" of per-tile
+  quality (the spatially correlated fault-rate field the device model
+  exposes as `device.tile_quality`) ranks physical tiles, and sensitive
+  leaves are steered onto the cleanest silicon.  The probe is one tiny
+  host transfer BEFORE the dispatch stream starts (real fabs ship a
+  known-bad-block map with the part), so the single-host-sync deploy
+  contract is untouched.
+
+The permutation invariant (property-tested): `RemapTable.perm` maps the
+C logical columns onto C *distinct* physical rows of the (C + S)-row
+physical array — no weight is lost or duplicated — and `active` marks
+exactly the image of `perm`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import device as dev_mod
+from .types import FaultConfig
+
+__all__ = [
+    "RemapConfig",
+    "RemapTable",
+    "n_spares",
+    "spare_candidates",
+    "build_table",
+    "identity_table",
+    "apply_remap",
+    "plan_placement",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RemapConfig:
+    """Spare provisioning + placement policy.
+
+    `min_gave_up`: a primary column is remapped only when at least this
+    many of its cells gave up AND its spare programmed no worse — a
+    remap can repair, never regress.
+    """
+
+    spare_frac: float = 0.25        # spares per leaf as a fraction of C
+    min_gave_up: int = 1
+    placement: bool = False         # steer leaves away from bad tiles
+    placement_provision: float = 2.0  # probed tiles / needed tiles
+
+    def replace(self, **kw) -> "RemapConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class RemapTable(NamedTuple):
+    """Logical->physical column view of one leaf's (C + S)-row array.
+
+    perm:   (C,) int32 — logical column c is served by physical row
+            ``perm[c]``; identity where no remap happened, ``C + i`` for
+            a column repaired onto spare i.
+    active: (C + S,) bool — physical rows carrying live weight (exactly
+            the image of `perm`); remapped-away primaries and unused
+            spares are inactive, so scrubs skip them.
+    """
+
+    perm: jax.Array
+    active: jax.Array
+
+
+def n_spares(c: int, cfg: RemapConfig) -> int:
+    """Spare columns provisioned for a C-column leaf (host-side)."""
+    if cfg.spare_frac <= 0.0:
+        return 0
+    return max(1, min(c, math.ceil(cfg.spare_frac * c)))
+
+
+def spare_candidates(gave_up: jax.Array, s: int) -> jax.Array:
+    """The s worst primary columns by give-up count (device-side).
+
+    Ties resolve by column index (stable argsort of the negated count),
+    so the candidate set is deterministic.
+    """
+    order = jnp.argsort(-gave_up, stable=True)
+    return order[:s].astype(jnp.int32)
+
+
+def build_table(
+    primary_gave_up: jax.Array,
+    cand: jax.Array,
+    spare_gave_up: jax.Array,
+    min_gave_up: int = 1,
+) -> RemapTable:
+    """Decide the remap from programming evidence (device-side).
+
+    Candidate i (primary column ``cand[i]``) is remapped onto spare i
+    iff the primary had >= `min_gave_up` unprogrammable cells and the
+    spare programmed no worse (fewer-or-equal gave-up cells) — a spare
+    on equally bad silicon is not an improvement worth the swap.
+    """
+    c = primary_gave_up.shape[0]
+    s = cand.shape[0]
+    sidx = jnp.arange(s, dtype=jnp.int32)
+    want = primary_gave_up[cand] >= float(min_gave_up)
+    better = spare_gave_up <= primary_gave_up[cand]
+    take = want & better
+    perm = (
+        jnp.arange(c, dtype=jnp.int32)
+        .at[cand]
+        .set(jnp.where(take, c + sidx, cand))
+    )
+    active = (
+        jnp.ones((c + s,), bool)
+        .at[cand].set(~take)
+        .at[c + sidx].set(take)
+    )
+    return RemapTable(perm=perm, active=active)
+
+
+def identity_table(c: int, s: int = 0) -> RemapTable:
+    """No-op table: identity perm, spares (if any) inactive."""
+    return RemapTable(
+        perm=jnp.arange(c, dtype=jnp.int32),
+        active=jnp.concatenate(
+            [jnp.ones((c,), bool), jnp.zeros((s,), bool)]
+        ),
+    )
+
+
+def apply_remap(x: jax.Array, table: RemapTable | None) -> jax.Array:
+    """Physical (C + S, ...) array -> logical (C, ...) view."""
+    if table is None:
+        return x
+    return x[table.perm]
+
+
+def plan_placement(
+    key: jax.Array,
+    counts: Sequence[int],
+    fault_cfg: FaultConfig,
+    sensitivities: Sequence[float] | None = None,
+    provision: float = 2.0,
+) -> list[np.ndarray]:
+    """Assign each leaf's physical column uids onto the cleanest tiles.
+
+    Args:
+      key: the deployment master key — `device.tile_quality` is a
+        deterministic function of (key, tile id), so the probe sees
+        exactly the silicon the deploy-time fault sampler will realize.
+      counts: per-leaf physical column counts (primaries + spares).
+      fault_cfg: fault population (geometry + correlated fields).
+      sensitivities: per-leaf placement priority (higher = placed
+        first, onto better tiles).  Default ``1 / count``: small leaves
+        are cheap to place well and tend to be disproportionately
+        load-bearing (heads, routers); big backbone leaves soak up the
+        remaining tiles.
+      provision: probed tiles / needed tiles (the fleet a part is
+        binned from; > 1 gives placement real choices).
+
+    Returns one int32 uid array per leaf (whole tiles, so a leaf's
+    columns share tile-correlated fields with their own spares, not a
+    neighbour's).  Leaves get disjoint uid ranges.  The probe is one
+    small device->host transfer issued before any programming dispatch.
+    """
+    counts = [int(c) for c in counts]
+    if sensitivities is None:
+        sensitivities = [1.0 / max(c, 1) for c in counts]
+    assert len(sensitivities) == len(counts)
+    cpt = fault_cfg.columns_per_tile
+    tiles_needed = [max(1, -(-c // cpt)) for c in counts]
+    total = sum(tiles_needed)
+    n_avail = max(total, math.ceil(total * max(provision, 1.0)))
+    # Factory probe: the per-tile fault-rate multiplier, fetched once
+    # before the dispatch stream (not via pipeline.host_fetch — it is
+    # not a stream sync, and the single-host-sync contract counts those).
+    q = np.asarray(
+        jax.device_get(
+            dev_mod.tile_quality(
+                key, jnp.arange(n_avail, dtype=jnp.int32), fault_cfg
+            )
+        )
+    )
+    tile_order = np.argsort(q, kind="stable")  # cleanest first
+    leaf_order = np.argsort(
+        -np.asarray(sensitivities, dtype=np.float64), kind="stable"
+    )
+    uid_arrays: list[np.ndarray | None] = [None] * len(counts)
+    t = 0
+    for li in leaf_order:
+        k = tiles_needed[li]
+        tiles = np.sort(tile_order[t : t + k])
+        t += k
+        uids = np.concatenate(
+            [tid * cpt + np.arange(cpt, dtype=np.int64) for tid in tiles]
+        )[: counts[li]]
+        uid_arrays[li] = uids.astype(np.int32)
+    return uid_arrays  # type: ignore[return-value]

@@ -30,7 +30,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["batch_ndim", "fold_col_keys", "split", "fold_in", "normal"]
+__all__ = ["batch_ndim", "fold_col_keys", "split", "fold_in", "normal",
+           "uniform"]
 
 
 def batch_ndim(key: jax.Array) -> int:
@@ -73,3 +74,12 @@ def normal(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
         tail = tuple(shape[1:])
         return jax.vmap(lambda k: jax.random.normal(k, tail, dtype))(key)
     return jax.random.normal(key, shape, dtype)
+
+
+def uniform(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    """U[0, 1) draw of `shape`; batch-transparent like :func:`normal`."""
+    if batch_ndim(key):
+        assert shape[0] == key.shape[0], (shape, key.shape)
+        tail = tuple(shape[1:])
+        return jax.vmap(lambda k: jax.random.uniform(k, tail, dtype))(key)
+    return jax.random.uniform(key, shape, dtype)

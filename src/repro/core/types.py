@@ -59,6 +59,53 @@ class DeviceConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static cell-fault population + spatially correlated variation.
+
+    Models the faulty-silicon regime real RRAM macros deploy into
+    (DESIGN.md Sec. 15): a fraction of cells never switch (stuck-at),
+    a fraction switch with collapsed efficiency (weak), and fault rates
+    / step efficiency vary systematically per tile and per chip.  All
+    probabilities are per-cell; the spatial geometry maps a physical
+    column uid onto a (chip, tile) coordinate, so the same uid always
+    lands on the same silicon — the fault map is a device property,
+    sampled once per deployment from per-column RNG sub-streams
+    (bucketed deploys stay bit-identical, DESIGN.md Sec. 10).
+
+    The all-zero default is contractually inert: a `FaultConfig()` map
+    pins no cell and multiplies every step by exactly 1.0, so the
+    programmed conductances are bit-identical to a fault-free run.
+    """
+
+    p_stuck_hrs: float = 0.0        # SA0: filament never forms; g pinned at 0
+    p_stuck_lrs: float = 0.0        # SA1: shorted filament; g pinned at G_max
+    p_weak: float = 0.0             # step-efficiency collapse (still moves)
+    weak_efficiency: float = 0.05   # weak cell step multiplier
+    p_exhausted: float = 0.0        # endurance-dead: frozen at a random level
+    # Physical geometry: column uid -> tile -> chip.
+    columns_per_tile: int = 128
+    tiles_per_chip: int = 64
+    # Spatially correlated variation: lognormal per-tile fault-rate
+    # multiplier (decades) and per-tile / per-chip systematic step-
+    # efficiency spread (fractional).  Columns in one tile share a draw.
+    sigma_tile_fault_dec: float = 0.0
+    sigma_tile_eff_frac: float = 0.0
+    sigma_chip_eff_frac: float = 0.0
+
+    @property
+    def any_faults(self) -> bool:
+        return (
+            max(self.p_stuck_hrs, self.p_stuck_lrs, self.p_weak,
+                self.p_exhausted) > 0.0
+            or max(self.sigma_tile_fault_dec, self.sigma_tile_eff_frac,
+                   self.sigma_chip_eff_frac) > 0.0
+        )
+
+    def replace(self, **kw) -> "FaultConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class ADCConfig:
     """Column TIA + SAR ADC (paper Table 1, Fig. 7)."""
 
@@ -118,6 +165,11 @@ class WVConfig:
     tau_w: float = 4.0               # HARP cell-domain threshold (unnormalized)
     mra_reads: int = 5               # M for multi-read averaging
     max_pulses_per_iter: int = 16    # magnitude methods: pulse burst cap
+    # Bounded retry budget (DESIGN.md Sec. 15): a per-cell write-pulse
+    # budget after which an unconverged cell is declared unprogrammable
+    # and frozen (give-up).  None = legacy unbounded behaviour; the
+    # give-up machinery then compiles to the exact current computation.
+    give_up_pulses: Optional[int] = None
     device: DeviceConfig = dataclasses.field(default_factory=DeviceConfig)
     adc: ADCConfig = dataclasses.field(default_factory=ADCConfig)
     noise: NoiseConfig = dataclasses.field(default_factory=NoiseConfig)

@@ -61,7 +61,12 @@ __all__ = ["WVStats", "program_columns", "verify_aggregate", "verify_sweep"]
 
 
 class WVStats(NamedTuple):
-    """Per-column WV diagnostics (all shape (C,))."""
+    """Per-column WV diagnostics (all shape (C,)).
+
+    The two give-up fields are appended LAST so positional consumers of
+    the original seven fields keep working; both are identically zero
+    unless `cfg.give_up_pulses` is set (DESIGN.md Sec. 15).
+    """
 
     iterations: jax.Array      # fine WV sweeps executed while column active
     latency_ns: jax.Array      # verify + write critical-path latency
@@ -70,6 +75,8 @@ class WVStats(NamedTuple):
     write_pulses: jax.Array    # total write pulses applied
     rms_error_lsb: jax.Array   # final per-column RMS |g - w*|
     frozen_frac: jax.Array     # fraction of cells frozen at termination
+    gave_up: jax.Array         # cells declared unprogrammable (count)
+    retry_pulses: jax.Array    # fine pulses burned on cells that gave up
 
 
 def verify_aggregate(
@@ -185,6 +192,8 @@ class _LoopState(NamedTuple):
     en: jax.Array
     reads: jax.Array
     pulses: jax.Array
+    cell_pulses: jax.Array   # (C, N) fine pulses per cell (give-up budget)
+    gave_up: jax.Array       # (C, N) cells frozen by budget exhaustion
 
 
 def program_columns(
@@ -195,6 +204,7 @@ def program_columns(
     d2d: jax.Array | None = None,
     col_ids: jax.Array | None = None,
     col_offset: jax.Array | None = None,
+    fault: dev_mod.FaultMap | None = None,
 ) -> tuple[jax.Array, WVStats]:
     """Program a batch of columns from HRS to integer target levels.
 
@@ -214,6 +224,22 @@ def program_columns(
         reassociated, so results match to the ulp, not bit-exactly).
       col_offset: optional (C,) static per-column converter reference
         offset biasing every verify read (readout.calibrate scenario).
+      fault: optional static per-cell :class:`device.FaultMap` — weak
+        cells see collapsed step efficiency, stuck cells never move.
+        Sampled caller-side (like `d2d`) so refresh re-programs under
+        the same silicon.  The verify key schedule is unconditional, so
+        `fault=None` and an inert map are bit-identical.
+
+    Give-up (DESIGN.md Sec. 15): with `cfg.give_up_pulses` set, a cell
+    whose cumulative fine-pulse count reaches the budget at the start of
+    a sweep is declared unprogrammable and folded into the frozen mask
+    (same treatment the fused kernel already gives converged cells); the
+    per-column count and the pulses burned on such cells are reported in
+    `WVStats.gave_up` / `WVStats.retry_pulses`.  Magnitude methods may
+    overshoot the budget by up to one burst (`max_pulses_per_iter - 1`)
+    because the check runs at sweep granularity.  Cells still unfrozen
+    at `max_fine_iters` also count as gave-up.  With the budget unset
+    the decision logic is untouched and both stats are exactly zero.
 
     Returns (g_final, WVStats).
     """
@@ -246,7 +272,7 @@ def program_columns(
     direction0 = jnp.where(n_coarse > 0, 1.0, 0.0)
     g = dev_mod.apply_pulses(
         k_coarse, g, direction0, n_coarse, d2d, dev_cfg,
-        step_lsb=dev_cfg.coarse_step_lsb,
+        step_lsb=dev_cfg.coarse_step_lsb, fault=fault,
     )
     lat0, en0 = write_phase_cost(g, n_coarse, direction0, dev_cfg, cost, coarse=True)
     pulses0 = jnp.sum(n_coarse, axis=-1)
@@ -259,10 +285,26 @@ def program_columns(
         cfg.freeze_warmup_ternary_extra if ternary else 0
     )
 
+    # Give-up budget: Python-level gate, so with the budget unset the
+    # frozen mask fed to the decision logic is *literally* st.frozen and
+    # the compiled decision stream is unchanged.
+    budget = cfg.give_up_pulses
+
     def body(st: _LoopState) -> _LoopState:
         k_it = rng.fold_in(k_loop, st.it)
         k_v, k_w = rng.split(k_it)
-        col_active = ~jnp.all(st.frozen, axis=-1)  # (C,)
+
+        if budget is not None:
+            # Budget check at sweep start: unconverged cells that spent
+            # their pulse budget are declared unprogrammable and treated
+            # exactly like converged-frozen cells from here on.
+            exhausted = (~st.frozen) & (st.cell_pulses >= float(budget))
+            frozen_in = st.frozen | exhausted
+            gave_up = st.gave_up | exhausted
+        else:
+            frozen_in = st.frozen
+            gave_up = st.gave_up
+        col_active = ~jnp.all(frozen_in, axis=-1)  # (C,)
 
         agg, dev_mag, n_cmp, thr = verify_aggregate(
             k_v, st.g, targets, cfg, col_offset
@@ -281,6 +323,11 @@ def program_columns(
             from repro.kernels.wv_step.ref import WVCellParams
 
             c2c, nmap = dev_mod.sample_write_noise(k_w, st.g.shape, dev_cfg)
+            # The kernel consumes a pre-multiplied efficiency field, so
+            # weak/tile-degraded cells need no kernel change; stuck cells
+            # are re-pinned after the update (same association as the
+            # unfused apply_pulses path -> still bit-identical).
+            d2d_eff = d2d if fault is None else d2d * fault.efficiency
 
             def upd(cf: bool):
                 p = WVCellParams(
@@ -296,19 +343,21 @@ def program_columns(
                     nmap_sqrt_pulses=dev_cfg.map_noise_mode == "pulse",
                 )
                 return wv_ops.wv_cell_update(
-                    agg, dev_mag, st.g, st.streak, st.frozen, c2c, nmap, d2d, p
+                    agg, dev_mag, st.g, st.streak, frozen_in, c2c, nmap,
+                    d2d_eff, p
                 )
 
             g, streak, frozen, n_p, direction = jax.lax.cond(
                 can_freeze, lambda: upd(True), lambda: upd(False)
             )
+            g = dev_mod.clamp_stuck(g, fault)
         else:
             decision = _threshold(agg, thr)
             # Streak / freeze (Sec. 3.1): K consecutive in-threshold
             # verifies freeze a cell, gated behind the warmup.
             in_thr = decision == 0.0
             streak = jnp.where(in_thr, st.streak + 1, 0)
-            frozen = st.frozen | (can_freeze & (streak >= cfg.k_streak))
+            frozen = frozen_in | (can_freeze & (streak >= cfg.k_streak))
 
             # Pulse sizing: ternary methods use single fine pulses;
             # magnitude methods apply round(|dev| / step) pulses (capped).
@@ -320,11 +369,13 @@ def program_columns(
                     1.0,
                     float(cfg.max_pulses_per_iter),
                 )
-            act_cell = (~st.frozen) & (decision != 0.0) & col_active[:, None]
+            act_cell = (~frozen_in) & (decision != 0.0) & col_active[:, None]
             n_p = jnp.where(act_cell, n_p, 0.0)
             direction = jnp.where(act_cell, -decision, 0.0)  # too high -> RESET
 
-            g_new = dev_mod.apply_pulses(k_w, st.g, direction, n_p, d2d, dev_cfg)
+            g_new = dev_mod.apply_pulses(
+                k_w, st.g, direction, n_p, d2d, dev_cfg, fault=fault
+            )
             g = jnp.where(col_active[:, None], g_new, st.g)
 
         # Cost accounting (active columns only).
@@ -343,6 +394,8 @@ def program_columns(
             en=st.en + actf * (en_r + en_w),
             reads=st.reads + actf * reads_per_sweep,
             pulses=st.pulses + jnp.sum(n_p, axis=-1),
+            cell_pulses=st.cell_pulses + n_p,
+            gave_up=gave_up,
         )
 
     def cond(st: _LoopState) -> jax.Array:
@@ -359,8 +412,21 @@ def program_columns(
         en=en0,
         reads=zero,
         pulses=pulses0,
+        cell_pulses=jnp.zeros(targets.shape, jnp.float32),
+        gave_up=jnp.zeros(targets.shape, bool),
     )
     st = jax.lax.while_loop(cond, body, init)
+
+    if budget is not None:
+        # Cells still unfrozen at max_fine_iters never converged either.
+        gave_up_cells = st.gave_up | ~st.frozen
+        retry_pulses = jnp.sum(
+            jnp.where(gave_up_cells, st.cell_pulses, 0.0), axis=-1
+        )
+        gave_up_count = jnp.sum(gave_up_cells.astype(jnp.float32), axis=-1)
+    else:
+        gave_up_count = zero
+        retry_pulses = zero
 
     err = st.g - targets
     stats = WVStats(
@@ -371,5 +437,7 @@ def program_columns(
         write_pulses=st.pulses,
         rms_error_lsb=jnp.sqrt(jnp.mean(err * err, axis=-1)),
         frozen_frac=jnp.mean(st.frozen.astype(jnp.float32), axis=-1),
+        gave_up=gave_up_count,
+        retry_pulses=retry_pulses,
     )
     return st.g, stats

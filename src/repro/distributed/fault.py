@@ -22,6 +22,7 @@ import dataclasses
 import logging
 from typing import Any, Callable, Iterator
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 
 log = logging.getLogger(__name__)
@@ -33,15 +34,25 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FaultInjector:
-    """Deterministically fail at given steps (each fires once)."""
+    """Deterministically fail at given steps (each fires once).
+
+    Every injection lands a zero-duration marker in the obs trace, so a
+    recovery timeline read in Perfetto shows exactly where the failures
+    were planted relative to the checkpoint/restore spans.
+    """
 
     fail_at_steps: tuple[int, ...] = ()
-    _fired: set = dataclasses.field(default_factory=set)
+    _fired: set[int] = dataclasses.field(default_factory=set)
 
     def maybe_fail(self, step: int) -> None:
         if step in self.fail_at_steps and step not in self._fired:
             self._fired.add(step)
+            obs.instant("fault.injected", cat="fault", step=step)
             raise SimulatedFailure(f"injected failure at step {step}")
+
+    def reset(self) -> None:
+        """Re-arm every planned failure (for runner reuse across runs)."""
+        self._fired.clear()
 
 
 @dataclasses.dataclass
@@ -60,6 +71,10 @@ class FaultTolerantRunner:
         metrics_log: list = []
         step = start_step
         end = start_step + num_steps
+        # Pre-checkpoint recovery needs the true initial state: resetting
+        # only `step` would re-apply steps to an already-advanced state
+        # (step_fn is functional, so holding the reference is free).
+        initial_state = state
         # Retries are tracked PER STEP: a rolling counter resets while
         # replaying checkpointed steps, turning a persistently-failing
         # step into an infinite restore loop (caught by the crash-loop
@@ -88,5 +103,6 @@ class FaultTolerantRunner:
                 except FileNotFoundError:
                     # No checkpoint yet: restart from the initial state.
                     step = start_step
+                    state = initial_state
         self.manager.save(step, state, blocking=True)
         return state, metrics_log

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import readout as ro
+from repro.core import device as dev_mod
 from repro.core import pipeline
 from repro.core.cost import CircuitCost, read_phase_cost
 from repro.core.types import WVConfig, WVMethod
@@ -187,13 +188,17 @@ def _reprogram_subset(
     cfg: WVConfig,
     cost: CircuitCost,
     drift_cfg: DriftConfig,
+    fault: dev_mod.FaultMap | None = None,
 ) -> tuple[CellState, float, float, float]:
     """Re-program the masked columns; returns (state, lat, energy, pulses).
 
     Wear-degraded step efficiency feeds `program_columns` through its
     d2d argument, so an old array genuinely takes more WV iterations to
-    converge (and may fail to).  Latency is the max over re-programmed
-    columns (they run array-parallel); energy is the sum.
+    converge (and may fail to).  A deployment-time `FaultMap` is physical
+    state (DESIGN.md Sec. 15): its rows are gathered for the flagged
+    columns and passed through the dispatch, NEVER resampled — the scrub
+    re-programs the same silicon the deploy hit.  Latency is the max
+    over re-programmed columns (they run array-parallel); energy the sum.
     """
     c, n = targets.shape
     idx = np.nonzero(mask)[0]
@@ -206,9 +211,12 @@ def _reprogram_subset(
     # Shared batched entry point (one compile cache with deployment);
     # col_ids are the physical column indices, so each column's refresh
     # noise stream is independent of which other columns were flagged.
-    fn = pipeline.get_program_fn(cfg, cost)
+    fn = pipeline.get_program_fn(cfg, cost, with_fault=fault is not None)
+    fargs = (
+        (jax.tree.map(lambda x: x[idx_p], fault),) if fault is not None else ()
+    )
     g_sub, stats = fn(
-        k_prog, sub_targets, sub_d2d, jnp.asarray(idx_p, jnp.int32)
+        k_prog, sub_targets, sub_d2d, jnp.asarray(idx_p, jnp.int32), *fargs
     )
 
     # Scatter back; idx_p = [idx, filler], so rows 0..len(idx)-1 are the
@@ -241,31 +249,46 @@ def apply_refresh(
     drift_cfg: DriftConfig,
     refresh_cfg: RefreshConfig,
     epoch: int,
+    active: jax.Array | None = None,
+    fault: dev_mod.FaultMap | None = None,
 ) -> tuple[CellState, RefreshOutcome]:
-    """Run one epoch's refresh decision for a batch of columns."""
+    """Run one epoch's refresh decision for a batch of columns.
+
+    Remapped arrays (DESIGN.md Sec. 15): `active` masks the physical
+    rows that carry live weight.  Inactive rows — remapped-away
+    primaries (often unprogrammable silicon that would flag every
+    epoch) and unused spares — are never flagged or re-programmed,
+    and under PERIODIC only active rows are scrubbed.  `fault` is the
+    deployment's sampled fault map, threaded into re-programming.
+    """
     c = targets.shape[0]
     outcome = RefreshOutcome()
     policy = refresh_cfg.policy
     due = (epoch + 1) % max(refresh_cfg.period_epochs, 1) == 0
     if policy == RefreshPolicy.NONE or not due:
         return state, outcome
+    active_h = (
+        np.ones((c,), bool) if active is None else np.asarray(active)
+    )
+    n_active = int(active_h.sum())
 
     k_v, k_p = jax.random.split(key)
     if policy == RefreshPolicy.PERIODIC:
-        mask = np.ones((c,), bool)
+        mask = active_h.copy()
     elif policy == RefreshPolicy.VERIFY_TRIGGERED:
         flagged, sweeps = flag_columns(k_v, state.g, targets, cfg, refresh_cfg)
-        mask = np.asarray(flagged)
-        # Every column pays `sweeps` verify sweeps (read phase, no writes).
+        mask = np.asarray(flagged) & active_h
+        # Every active column pays `sweeps` verify sweeps (read phase,
+        # no writes); inactive rows are not driven.
         lat_v, en_v = read_phase_cost(cfg, cost)
         outcome.verify_latency_ns = float(lat_v) * sweeps  # array-parallel
-        outcome.verify_energy_pj = float(en_v) * sweeps * c
+        outcome.verify_energy_pj = float(en_v) * sweeps * n_active
         outcome.flagged = mask
     else:
         raise ValueError(policy)
 
     state, lat, en, pulses = _reprogram_subset(
-        k_p, state, targets, mask, cfg, cost, drift_cfg
+        k_p, state, targets, mask, cfg, cost, drift_cfg, fault=fault
     )
     outcome.n_reprogrammed = int(mask.sum())
     outcome.program_latency_ns = lat

@@ -139,10 +139,18 @@ class LifetimeSimulator:
         num = 0.0
         den = 0
         for name, st in self.states.items():
-            tgt = self.deployed.arrays[name].targets
-            err = st.g - tgt.astype(jnp.float32)
-            num += float(jnp.sum(err * err))
-            den += err.size
+            arr = self.deployed.arrays[name]
+            err = st.g - arr.targets.astype(jnp.float32)
+            if arr.remap is not None:
+                # Remapped arrays: only physical rows carrying live
+                # weight count — a remapped-away stuck column parked at
+                # its pinned level is not drift the model experiences.
+                act = arr.remap.active
+                num += float(jnp.sum(jnp.where(act[:, None], err * err, 0.0)))
+                den += int(jnp.sum(act)) * err.shape[1]
+            else:
+                num += float(jnp.sum(err * err))
+                den += err.size
         return (num / max(den, 1)) ** 0.5
 
     def _stuck_frac(self) -> float:
@@ -203,9 +211,14 @@ class LifetimeSimulator:
                     k_adv, st, dt_s, leaf_reads, wv_cfg.device, self.drift_cfg
                 )
                 if name in chosen:
+                    arr = self.deployed.arrays[name]
                     st, out = apply_refresh(
-                        k_ref, st, self.deployed.arrays[name].targets, wv_cfg,
+                        k_ref, st, arr.targets, wv_cfg,
                         cost, self.drift_cfg, self.refresh_cfg, self.epoch,
+                        active=(
+                            arr.remap.active if arr.remap is not None else None
+                        ),
+                        fault=arr.fault,
                     )
                     if out.flagged is not None:
                         flagged += int(out.flagged.sum())

@@ -32,7 +32,10 @@ import numpy as np
 
 from repro.cim import CIMConfig, cim_matmul, tile
 from repro.core import ADCConfig, CircuitCost, NoiseConfig, WVConfig, WVMethod
+from repro.core import device as dev_mod
+from repro.core import remap as remap_mod
 from repro.core.cost import read_phase_cost
+from repro.core.types import FaultConfig
 from repro.core.wv import program_columns, verify_aggregate
 from repro.lifetime.refresh import flag_columns
 from repro.quant import QuantConfig, pack_columns, quantize_weight
@@ -107,6 +110,50 @@ def generate() -> dict[str, np.ndarray]:
         )
         out[f"flag_{m.value}"] = np.asarray(flagged)
         out[f"flag_sweeps_{m.value}"] = np.asarray(sweeps)
+
+    # ---- robustness layer (DESIGN.md Sec. 15) -----------------------
+    # Zero-fault invariance: the give-up/fault machinery enabled but
+    # inert (generous budget, all-zero fault map) must regenerate the
+    # PRE-robustness-layer programming arrays bit-exactly.  Asserted
+    # here so the CI --check re-proves the invariance on every push.
+    inert = dev_mod.empty_fault_map(targets.shape)
+    for m in METHODS:
+        cfg = _cfg(m).replace(give_up_pulses=500)
+        g_z, _ = jax.jit(lambda k, t: program_columns(k, t, cfg, fault=inert))(
+            jax.random.PRNGKey(42), targets
+        )
+        assert np.array_equal(np.asarray(g_z), out[f"prog_g_{m.value}"]), (
+            f"zero-fault guarded programming drifted from prog_g_{m.value}"
+        )
+
+    # Pinned faulty-silicon path: one fault map (stuck/weak cells +
+    # correlated per-tile rate field) and the bounded-retry outputs.
+    fault_cfg = FaultConfig(
+        p_stuck_hrs=0.06, p_stuck_lrs=0.03, p_weak=0.06,
+        sigma_tile_fault_dec=0.5, columns_per_tile=4, tiles_per_chip=2,
+    )
+    col_ids = jnp.arange(targets.shape[0], dtype=jnp.int32)
+    cfg_h = _cfg(WVMethod.HARP)
+    fmap = dev_mod.sample_fault_map(
+        jax.random.PRNGKey(42), col_ids, targets.shape, fault_cfg, cfg_h.device
+    )
+    out["fault_stuck"] = np.asarray(fmap.stuck)
+    out["fault_stuck_g"] = np.asarray(fmap.stuck_g)
+    out["fault_eff"] = np.asarray(fmap.efficiency)
+    for m in (WVMethod.HARP, WVMethod.CW_SC):
+        cfg = _cfg(m).replace(give_up_pulses=30)
+        g_f, st_f = jax.jit(
+            lambda k, t, c=cfg: program_columns(k, t, c, fault=fmap)
+        )(jax.random.PRNGKey(42), targets)
+        out[f"prog_g_fault_{m.value}"] = np.asarray(g_f)
+        out[f"fault_gave_up_{m.value}"] = np.asarray(st_f.gave_up)
+        out[f"fault_retry_{m.value}"] = np.asarray(st_f.retry_pulses)
+    # Remap table built from the CW-SC give-up profile (2 spares,
+    # fault-free spares so every wanted candidate is taken).
+    cand = remap_mod.spare_candidates(st_f.gave_up, 2)
+    tbl = remap_mod.build_table(st_f.gave_up, cand, jnp.zeros((2,)))
+    out["remap_perm"] = np.asarray(tbl.perm)
+    out["remap_active"] = np.asarray(tbl.active)
 
     # CIM analog matmul through macro tiles (noisy + quantized converters).
     w = jax.random.normal(jax.random.PRNGKey(3), (24, 8), jnp.float32)

@@ -31,7 +31,10 @@ def test_list_names_without_importing_jax():
     r = _run("--list", timeout=120)
     assert r.returncode == 0, r.stderr
     names = [ln.split()[0] for ln in r.stdout.splitlines() if ln.strip()]
-    for expected in ("fig9.convergence", "serving.traffic", "readout.sweep"):
+    for expected in (
+        "fig9.convergence", "serving.traffic", "readout.sweep",
+        "fault.tolerance",
+    ):
         assert expected in names
     assert "[quick]" in r.stdout  # quick-capable entries are tagged
 
@@ -65,6 +68,34 @@ def _git_ls_files():
     if out.returncode != 0:
         pytest.skip("not a git checkout")
     return out.stdout.splitlines()
+
+def test_committed_bench_json_parse_and_finite():
+    """Every committed BENCH_*.json must parse and hold only finite
+    numbers — a NaN/Infinity in a pinned trajectory means a benchmark
+    silently diverged and its assertions let it through."""
+    import json
+    import math
+
+    tracked = [
+        f for f in _git_ls_files()
+        if f.startswith("benchmarks/BENCH_") and f.endswith(".json")
+    ]
+    assert tracked, "no committed BENCH_*.json trajectories found"
+
+    def walk(x, path):
+        if isinstance(x, dict):
+            for k, v in x.items():
+                walk(v, f"{path}.{k}")
+        elif isinstance(x, list):
+            for i, v in enumerate(x):
+                walk(v, f"{path}[{i}]")
+        elif isinstance(x, float):
+            assert math.isfinite(x), f"non-finite value at {path}: {x}"
+
+    for f in tracked:
+        with open(os.path.join(REPO, f)) as fh:
+            walk(json.load(fh), f)
+
 
 def test_no_bytecode_tracked_and_ignored():
     """No .pyc/__pycache__ may ever be committed; .gitignore blocks them."""

@@ -1,0 +1,217 @@
+"""Faulty-silicon robustness layer (DESIGN.md Sec. 15).
+
+Covers the three owners of the fault-model contract:
+
+* device — fault sampling determinism (bucketing-independent per-column
+  sub-streams), stuck-cell clamping, inert-map bit-identity;
+* WV — bounded-retry give-up accounting rides `WVStats` without
+  touching the zero-config decision stream;
+* remap — spare-column table construction is a PERMUTATION onto
+  distinct physical rows (hypothesis property), and the deploy path
+  carries give-up/remap counts on its single host sync.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core import default_config_for_array, pipeline, remap
+from repro.core import device as dev_mod
+from repro.core.programmer import deploy_arrays
+from repro.core.types import FaultConfig, WVConfig, WVMethod
+from repro.core.wv import program_columns
+
+N = 16
+
+
+def _cfg(**kw) -> WVConfig:
+    return WVConfig(
+        method=WVMethod.HARP, n_cells=N, max_fine_iters=20,
+        max_coarse_iters=4, **kw,
+    )
+
+
+def _targets(c: int = 8, seed: int = 0) -> jax.Array:
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (c, N), 0, 8
+    ).astype(jnp.float32)
+
+
+_FAULTY = FaultConfig(
+    p_stuck_hrs=0.05, p_stuck_lrs=0.03, p_weak=0.05,
+    sigma_tile_fault_dec=0.5, columns_per_tile=4, tiles_per_chip=2,
+)
+
+
+# -------------------------------------------------------------- device
+def test_fault_config_any_faults_gate():
+    assert not FaultConfig().any_faults
+    assert FaultConfig(p_weak=1e-4).any_faults
+    assert FaultConfig(sigma_chip_eff_frac=0.1).any_faults
+
+
+def test_fault_sampling_bucketing_independent():
+    """A column's fault row depends only on (key, uid) — slicing the
+    same uids out of a larger batch reproduces it bit-exactly."""
+    key = jax.random.PRNGKey(3)
+    dev = _cfg().device
+    uids = jnp.arange(32, dtype=jnp.int32)
+    full = dev_mod.sample_fault_map(key, uids, (32, N), _FAULTY, dev)
+    sub = dev_mod.sample_fault_map(key, uids[5:9], (4, N), _FAULTY, dev)
+    for a, b in zip(full, sub):
+        np.testing.assert_array_equal(np.asarray(a[5:9]), np.asarray(b))
+
+
+def test_stuck_cells_pinned_after_programming():
+    t = _targets()
+    fmap = dev_mod.sample_fault_map(
+        jax.random.PRNGKey(1), jnp.arange(t.shape[0], dtype=jnp.int32),
+        t.shape, _FAULTY, _cfg().device,
+    )
+    assert bool(jnp.any(fmap.stuck)), "fault rate too low to test clamping"
+    g, _ = program_columns(
+        jax.random.PRNGKey(2), t, _cfg(give_up_pulses=20), fault=fmap
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(fmap.stuck, g, 0.0)),
+        np.asarray(jnp.where(fmap.stuck, fmap.stuck_g, 0.0)),
+    )
+
+
+# ------------------------------------------------------------------ wv
+def test_inert_fault_and_give_up_bit_identical():
+    """fault=None, an all-empty map, and a generous give-up budget all
+    produce the same conductances and zero give-up counters."""
+    t = _targets()
+    g0, s0 = program_columns(jax.random.PRNGKey(7), t, _cfg())
+    g1, s1 = program_columns(
+        jax.random.PRNGKey(7), t, _cfg(give_up_pulses=500),
+        fault=dev_mod.empty_fault_map(t.shape),
+    )
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    # legacy config: counters exist but stay zero without a budget
+    assert float(jnp.sum(s0.gave_up)) == 0.0
+    assert float(jnp.sum(s0.retry_pulses)) == 0.0
+    # with a budget, gave_up counts never-converged cells (documented:
+    # cells still unfrozen at max_fine_iters) even when nothing exhausts
+    # the pulse budget — and each such cell carries its burned pulses
+    gu, rp = np.asarray(s1.gave_up), np.asarray(s1.retry_pulses)
+    assert (rp[gu > 0] > 0).all()
+    assert (rp[gu == 0] == 0).all()
+
+
+def test_give_up_fires_on_faulty_cells_and_counts_retries():
+    t = _targets()
+    fmap = dev_mod.sample_fault_map(
+        jax.random.PRNGKey(1), jnp.arange(t.shape[0], dtype=jnp.int32),
+        t.shape, _FAULTY, _cfg().device,
+    )
+    _, st = program_columns(
+        jax.random.PRNGKey(2), t, _cfg(give_up_pulses=20), fault=fmap
+    )
+    assert float(jnp.sum(st.gave_up)) > 0
+    assert float(jnp.sum(st.retry_pulses)) > 0
+    # every stuck cell that needed pulses must eventually give up:
+    # give-up count per column >= stuck-and-nonzero-target cells
+    assert float(jnp.sum(st.gave_up)) >= 0.5 * float(jnp.sum(fmap.stuck))
+
+
+# --------------------------------------------------------------- remap
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(4, 48), st.integers(1, 12))
+def test_remap_table_is_permutation(seed, c, s):
+    """For ANY give-up profile and spare quality, the table maps the C
+    logical columns onto C DISTINCT physical rows of the C+S array, and
+    `active` is exactly the image of the permutation."""
+    rng = np.random.default_rng(seed)
+    s = min(s, c)
+    prim = jnp.asarray(rng.integers(0, 5, c).astype(np.float32))
+    spare = jnp.asarray(rng.integers(0, 5, s).astype(np.float32))
+    cand = remap.spare_candidates(prim, s)
+    tbl = remap.build_table(prim, cand, spare)
+    perm = np.asarray(tbl.perm)
+    active = np.asarray(tbl.active)
+    assert perm.shape == (c,) and active.shape == (c + s,)
+    assert len(np.unique(perm)) == c, "perm must be injective"
+    assert perm.min() >= 0 and perm.max() < c + s
+    image = np.zeros(c + s, bool)
+    image[perm] = True
+    np.testing.assert_array_equal(image, active)
+    # a remap only happens toward a spare at least as good as its primary
+    moved = perm >= c
+    if moved.any():
+        prim_np, spare_np = np.asarray(prim), np.asarray(spare)
+        assert all(
+            spare_np[perm[i] - c] <= prim_np[i] for i in np.nonzero(moved)[0]
+        )
+
+
+def test_identity_table_roundtrip():
+    tbl = remap.identity_table(6, 2)
+    x = jnp.arange(8.0)[:, None] * jnp.ones((1, 3))
+    np.testing.assert_array_equal(
+        np.asarray(remap.apply_remap(x, tbl)), np.asarray(x[:6])
+    )
+    assert remap.apply_remap(x, None) is x
+
+
+def test_plan_placement_prefers_clean_tiles():
+    fc = FaultConfig(p_stuck_hrs=0.01, sigma_tile_fault_dec=1.0,
+                     columns_per_tile=8, tiles_per_chip=4)
+    key = jax.random.PRNGKey(11)
+    plans = remap.plan_placement(key, [16, 8], fc, sensitivities=[1.0, 2.0])
+    assert [len(p) for p in plans] == [16, 8]
+    all_uids = np.concatenate(plans)
+    assert len(np.unique(all_uids)) == 24, "placement must not alias uids"
+    # the most sensitive leaf (index 1) got the cleanest tiles
+    q = np.asarray(dev_mod.tile_quality(
+        key, jnp.arange(int(all_uids.max() // 8 + 1), dtype=jnp.int32), fc
+    ))
+    mean_q = [float(np.mean(q[np.unique(p // 8)])) for p in plans]
+    assert mean_q[1] <= mean_q[0]
+
+
+# -------------------------------------------------------------- deploy
+def test_deploy_zero_fault_bit_identical_single_sync():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (24, 12)) * 0.2}
+    wv = default_config_for_array(N)
+    dep0, _ = deploy_arrays(jax.random.PRNGKey(5), params, wv, min_bucket=16)
+    before = pipeline.host_sync_count()
+    dep1, rep1 = deploy_arrays(
+        jax.random.PRNGKey(5), params, wv.replace(give_up_pulses=500),
+        min_bucket=16, fault_cfg=FaultConfig(),
+    )
+    assert pipeline.host_sync_count() - before == 1
+    m0, m1 = dep0.materialize(), dep1.materialize()
+    np.testing.assert_array_equal(np.asarray(m0["w"]), np.asarray(m1["w"]))
+    assert rep1.total_gave_up_cells == 0.0
+    assert rep1.remapped_columns == 0
+
+
+def test_deploy_fault_remap_reports_on_single_sync():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (24, 12)) * 0.2}
+    wv = default_config_for_array(N).replace(give_up_pulses=24)
+    fc = FaultConfig(p_stuck_hrs=0.05, p_weak=0.05,
+                     columns_per_tile=8, tiles_per_chip=2)
+    before = pipeline.host_sync_count()
+    dep, rep = deploy_arrays(
+        jax.random.PRNGKey(5), params, wv, min_bucket=16,
+        fault_cfg=fc, remap_cfg=remap.RemapConfig(spare_frac=0.25),
+    )
+    assert pipeline.host_sync_count() - before == 1, (
+        "give-up/remap accounting must ride the existing single fetch"
+    )
+    assert rep.total_gave_up_cells > 0
+    assert rep.remapped_columns > 0
+    arr = dep.arrays["['w']"]
+    assert arr.remap is not None and arr.fault is not None
+    c = arr.remap.perm.shape[0]
+    assert arr.g.shape[0] == arr.remap.active.shape[0] == c + (
+        remap.n_spares(c, remap.RemapConfig(spare_frac=0.25))
+    )
+    assert arr.g.shape[0] > c, "remapped state must hold physical C+S rows"
+    # materialize serves the repaired logical view
+    assert dep.materialize()["w"].shape == params["w"].shape

@@ -181,6 +181,58 @@ def test_fault_runner_gives_up_on_crash_loop():
             runner.run({"x": jnp.zeros(())}, 0, 10)
 
 
+def test_fault_runner_retry_exhaustion_with_real_injector():
+    """A zero-retry budget turns the FIRST real injection into give-up.
+
+    Unlike the crash-loop test (which needs a subclass that refires
+    forever), the stock `FaultInjector` exercises the exhaustion branch
+    directly when `max_retries_per_step` is 0 — and the injection must
+    land a `fault.injected` instant in the obs trace.
+    """
+    from repro.obs import trace as obs_trace
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        inj = FaultInjector(fail_at_steps=(3,))
+        runner = FaultTolerantRunner(
+            lambda s, b: (s, {}), lambda i: i, mgr,
+            checkpoint_every=100, max_retries_per_step=0, injector=inj,
+        )
+        with pytest.raises(RuntimeError, match="giving up"):
+            runner.run({"x": jnp.zeros(())}, 0, 10)
+        assert runner.restarts == 1
+        assert inj._fired == {3}
+        assert any(
+            e.get("name") == "fault.injected" and e["args"]["step"] == 3
+            for e in obs_trace.events()
+        )
+
+
+def test_fault_injector_reset_rearms():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        inj = FaultInjector(fail_at_steps=(3,))
+        runner = FaultTolerantRunner(
+            lambda s, b: ({"x": s["x"] + b}, {}), lambda i: i, mgr,
+            checkpoint_every=4, injector=inj,
+        )
+        state, _ = runner.run({"x": jnp.zeros(())}, 0, 10)
+        assert runner.restarts == 1 and inj._fired == {3}
+        assert float(state["x"]) == sum(range(10))
+        inj.reset()
+        assert inj._fired == set()
+        # re-armed: the same planned failure fires again on a fresh run
+        runner2 = FaultTolerantRunner(
+            lambda s, b: ({"x": s["x"] + b}, {}), lambda i: i, mgr,
+            checkpoint_every=100, injector=inj,
+        )
+        with tempfile.TemporaryDirectory() as d2:
+            runner2.manager = CheckpointManager(d2, keep=3)
+            state2, _ = runner2.run({"x": jnp.zeros(())}, 0, 10)
+        assert runner2.restarts == 1
+        assert float(state2["x"]) == sum(range(10))
+
+
 def test_straggler_monitor_escalates():
     mon = StragglerMonitor(threshold=2.0, strikes_to_escalate=2, warmup_steps=3)
     events = []
