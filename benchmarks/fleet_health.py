@@ -1,0 +1,378 @@
+"""Fleet health & SLO observability under degradation (BENCH_fleet).
+
+A small serving FLEET — one continuous-batching replica per deployed
+chip, each programmed on its own (heterogeneous) silicon via PR 7's
+correlated FaultConfig fields — serves ONE global Poisson arrival
+stream through a least-loaded router while staggered verify-triggered
+scrubs run between decode steps.  Every replica accumulates streaming
+latency digests in-jit and per-tile health maps on its existing syncs
+(DESIGN.md Sec. 16); a declarative `SLOPolicy` is evaluated host-side
+once per fixed window over `obs.fleet_status()`.
+
+The degradation scenario is the point of the benchmark: the LAST
+replica deploys on bad silicon (a stuck-cell population the healthy
+chips lack), but its first verify-triggered scrub is deferred to a
+known window — deferred maintenance.  Until that window the fleet is
+green.  At the inject window the scrub discovers the bad tiles
+(bounded-retry refresh gives up on the stuck cells), the give-up-rate
+rule breaches, the router drains the sick replica, and the remaining
+capacity is below the offered load — so the windowed p99 latency rule
+breaches in a following window.  Both firing windows are
+HARD-ASSERTED:
+
+* no SLO rule breaches in any window before the inject window;
+* the give-up-rate rule fires exactly AT the inject window;
+* the p99 latency rule fires after the inject window (the recorded
+  first-breach window), never before.
+
+Scheduler contracts are asserted per replica as in BENCH_serving:
+`host_syncs == decode_steps` (the digests ride the one per-step
+fetch).  Full mode commits BENCH_fleet.json; `--quick` writes the
+gitignored BENCH_fleet_quick.json plus TRACE_fleet_quick.json and
+fleet_status_quick.json for the CI dashboard render step.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import WVConfig, WVMethod
+from repro.core.programmer import deploy_arrays
+from repro.core.types import FaultConfig
+from repro.lifetime import LifetimeSimulator
+from repro.lifetime.refresh import RefreshConfig, RefreshPolicy
+from repro.models import ModelConfig, init_params
+from repro.serving import ContinuousScheduler, ServeEngine, poisson_requests
+
+from .common import emit, export_trace
+
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_fleet.json")
+OUT_QUICK = os.path.join(os.path.dirname(__file__), "BENCH_fleet_quick.json")
+
+GIVE_UP_PULSES = 80
+WINDOW_DIGEST = ("fleet.window_latency_steps", 0.0, 512.0, 128)
+
+
+def _model_cfg(quick: bool) -> ModelConfig:
+    return ModelConfig(
+        name="fleet-bench",
+        n_layers=1 if quick else 2,
+        d_model=32 if quick else 64,
+        n_heads=2,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=64 if quick else 128,
+        vocab_size=64,
+        dtype=jnp.float32,
+        attn_chunk_q=16,
+        attn_chunk_kv=16,
+        remat=False,
+        tie_embeddings=False,
+    )
+
+
+def _fault_cfg(sick: bool) -> FaultConfig:
+    """Heterogeneous silicon: every chip carries correlated per-tile /
+    per-chip variation (distinct per-replica deploy keys draw distinct
+    maps); the sick chip additionally has a stuck-cell population."""
+    base = FaultConfig(
+        columns_per_tile=32,
+        tiles_per_chip=8,
+        sigma_tile_fault_dec=0.3,
+        sigma_tile_eff_frac=0.05,
+        sigma_chip_eff_frac=0.05,
+    )
+    if sick:
+        base = base.replace(p_stuck_hrs=0.02, p_stuck_lrs=0.01)
+    return base
+
+
+def _free_slots(sched: ContinuousScheduler) -> int:
+    return int(np.sum(np.asarray(sched._rid) < 0))
+
+
+def main(quick: bool = False) -> dict:
+    cfg = _model_cfg(quick)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_replicas = 2
+    sick = n_replicas - 1
+    n_slots = 4
+    max_len = 64
+    prompt_lens = (3, 14)
+    max_new = (4, 8)
+    window_steps = 16 if quick else 24
+    n_windows = 8
+    inject_window = 2
+    rate = 1.2  # > post-drain capacity, < the fleet's
+    n_requests = int(rate * window_steps * n_windows)
+    scrub_dt_s = 30.0
+
+    # Default (converging) fine budget: healthy cells program to target,
+    # so give-ups are the signature of genuinely bad silicon — the
+    # stuck-cell population on the sick chip — not of a starved sweep.
+    wv = WVConfig(method=WVMethod.HARP, give_up_pulses=GIVE_UP_PULSES)
+
+    # ------------------------------------------------- deploy the fleet
+    replicas = []
+    for r in range(n_replicas):
+        fc = _fault_cfg(sick=(r == sick))
+        deployed, report = deploy_arrays(
+            jax.random.PRNGKey(100 + r), params, wv, fault_cfg=fc
+        )
+        engine = ServeEngine(cfg, deployed.materialize(), temperature=0.7)
+        sched = ContinuousScheduler(
+            engine, n_slots=n_slots, max_len=max_len,
+            key=jax.random.PRNGKey(200 + r), name=f"rep{r}",
+        )
+        sched.warmup(prompt_range=prompt_lens)
+        warm = dict(sched.trace_counts)
+        sched.reset(keep_traces=True)
+        sim = LifetimeSimulator(
+            jax.random.PRNGKey(300 + r), deployed,
+            refresh_cfg=RefreshConfig(policy=RefreshPolicy.VERIFY_TRIGGERED),
+            on_refresh=engine.swap_params,
+            columns_per_tile=fc.columns_per_tile,
+        )
+        replicas.append(
+            {
+                "r": r,
+                "sick": r == sick,
+                "fault_cfg": fc,
+                "deployed": deployed,
+                "sched": sched,
+                "sim": sim,
+                "warm": warm,
+                "rms_cell_error_lsb": round(float(report.rms_cell_error_lsb), 4),
+                "deploy_gave_up_cells": float(report.total_gave_up_cells),
+                "completed_seen": 0,
+            }
+        )
+    n_cells_fleet = sum(
+        int(np.prod(arr.g.shape))
+        for rep in replicas
+        for arr in rep["deployed"].arrays.values()
+    )
+
+    # --------------------------------------------------- SLO policy
+    p99_ceiling = 15.0
+    give_up_ceiling = 1e-4
+    policy = obs.SLOPolicy(
+        rules=(
+            obs.SLORule(
+                "p99_latency", "digests.fleet.window_latency_steps.p99",
+                p99_ceiling,
+            ),
+            obs.SLORule(
+                "give_up_rate", "health.gauges.fleet.give_up_rate",
+                give_up_ceiling,
+            ),
+            obs.SLORule(
+                "scrub_backlog", "health.gauges.lifetime.refresh_debt_epochs",
+                float(n_windows + 1),
+            ),
+        )
+    )
+
+    # ------------------------------------------------- global serve loop
+    reqs = poisson_requests(
+        23, n_requests, rate=rate, vocab=cfg.vocab_size,
+        prompt_lens=prompt_lens, max_new=max_new,
+    )
+    pending = collections.deque(sorted(reqs, key=lambda q: (q.arrival, q.rid)))
+    drained: set[int] = set()
+    windows = []
+    first_breach: dict[str, int | None] = {ru.name: None for ru in policy.rules}
+    t = 0
+    for w in range(n_windows):
+        # window-scoped latency digest: completions THIS window only
+        obs.digests.reset(WINDOW_DIGEST[0])
+        for _ in range(window_steps):
+            # least-loaded router over the healthy replicas
+            while pending and pending[0].arrival <= t:
+                live = [rep for rep in replicas if rep["r"] not in drained]
+                live = [rep for rep in live if _free_slots(rep["sched"]) > 0]
+                if not live:
+                    break
+                rep = max(live, key=lambda q: _free_slots(q["sched"]))
+                rep["sched"].now = float(t)
+                rep["sched"].admit(pending.popleft())
+            for rep in replicas:
+                if rep["sched"].active_slots():
+                    rep["sched"].now = float(t)
+                    rep["sched"].step()
+            t += 1
+            # staggered verify-triggered scrubs: replica r's slot within
+            # the window is offset by 4r steps; the sick replica's
+            # maintenance is DEFERRED until the inject window (this is
+            # the injected degradation crossing into view).
+            for rep in replicas:
+                r = rep["r"]
+                if t % window_steps != (4 * (r + 1)) % window_steps:
+                    continue
+                if rep["sick"] and w < inject_window:
+                    continue
+                # Deferred maintenance catches up with a FULL scrub the
+                # first time it runs (every leaf is overdue), which is
+                # exactly when the bad tiles surface; steady-state
+                # scrubs stay incremental (O(max_leaves) per epoch).
+                catch_up = rep["sick"] and rep["sim"].epoch == 0
+                rep["sim"].step_epoch(
+                    scrub_dt_s, max_leaves=None if catch_up else 2
+                )
+        # ---- end of window: harvest completions + evaluate the policy
+        arrivals = sum(1 for q in reqs if w * window_steps <= q.arrival < t)
+        completed_w = 0
+        for rep in replicas:
+            done = rep["sched"].completed
+            for rec in done[rep["completed_seen"]:]:
+                name, lo, hi, nb = WINDOW_DIGEST
+                obs.digests.observe(
+                    name, rec.latency_steps, lo=lo, hi=hi, n_buckets=nb
+                )
+                completed_w += 1
+            rep["completed_seen"] = len(done)
+        gave_up = obs.registry.snapshot().get("lifetime.gave_up_cells", 0.0)
+        obs.health_registry.set_gauge(
+            "fleet.give_up_rate", gave_up / n_cells_fleet
+        )
+        results = policy.evaluate(obs.fleet_status(), window=w)
+        breaches = {res["name"]: bool(res["breached"]) for res in results}
+        for res in results:
+            if res["breached"] and first_breach[res["name"]] is None:
+                first_breach[res["name"]] = w
+        # health-driven routing: a give-up breach drains the sick replica
+        if breaches.get("give_up_rate") and sick not in drained:
+            drained.add(sick)
+        wd = obs.digests.get(WINDOW_DIGEST[0])
+        windows.append(
+            {
+                "window": w,
+                "arrivals": arrivals,
+                "completed": completed_w,
+                "queue_len": len(pending),
+                "p99_window_latency_steps": (
+                    wd.quantile(0.99) if wd is not None else None
+                ),
+                "give_up_rate": gave_up / n_cells_fleet,
+                "drained": sorted(drained),
+                "breaches": breaches,
+            }
+        )
+        emit(
+            f"fleet.window{w}",
+            0.0,
+            f"p99={windows[-1]['p99_window_latency_steps']};"
+            f"give_up_rate={windows[-1]['give_up_rate']:.2e};"
+            f"breaches={sum(breaches.values())}",
+        )
+
+    # -------------------------------------------------- hard assertions
+    for rep in replicas:
+        s = rep["sched"]
+        assert s.host_syncs == s.decode_steps, (
+            rep["r"], s.host_syncs, s.decode_steps,
+        )
+        retraces = {
+            k: s.trace_counts[k] - rep["warm"][k] for k in rep["warm"]
+        }
+        assert all(v == 0 for v in retraces.values()), (rep["r"], retraces)
+    pre = [wd for wd in windows if wd["window"] < inject_window]
+    assert all(not any(wd["breaches"].values()) for wd in pre), (
+        f"SLO breach before the inject window: {pre}"
+    )
+    assert first_breach["give_up_rate"] == inject_window, (
+        f"give-up-rate rule fired at {first_breach['give_up_rate']}, "
+        f"expected inject window {inject_window}"
+    )
+    assert (
+        first_breach["p99_latency"] is not None
+        and first_breach["p99_latency"] >= inject_window
+    ), f"p99 rule fired at {first_breach['p99_latency']}"
+
+    # ------------------------------------------------------- artifacts
+    per_replica = {}
+    for rep in replicas:
+        s = rep["sched"]
+        per_replica[f"rep{rep['r']}"] = {
+            "sick": rep["sick"],
+            "rms_cell_error_lsb": rep["rms_cell_error_lsb"],
+            "deploy_gave_up_cells": rep["deploy_gave_up_cells"],
+            "decode_steps": s.decode_steps,
+            "host_syncs": s.host_syncs,
+            "completed": len(s.completed),
+            "scrub_epochs": rep["sim"].epoch,
+            "digests": s.digest_stats(),
+        }
+    status = obs.fleet_status(
+        extra={
+            "fleet": {
+                "windows": windows,
+                "first_breach_window": first_breach,
+                "inject_window": inject_window,
+                "drained": sorted(drained),
+            }
+        }
+    )
+    out = {
+        "config": {
+            "quick": quick,
+            "model": cfg.name,
+            "n_replicas": n_replicas,
+            "sick_replica": sick,
+            "n_slots": n_slots,
+            "max_len": max_len,
+            "rate_req_per_step": rate,
+            "n_requests": n_requests,
+            "window_steps": window_steps,
+            "n_windows": n_windows,
+            "inject_window": inject_window,
+            "give_up_pulses": GIVE_UP_PULSES,
+            "slo": {
+                "p99_latency_steps_ceiling": p99_ceiling,
+                "give_up_rate_ceiling": give_up_ceiling,
+            },
+        },
+        "replicas": per_replica,
+        "windows": windows,
+        "contracts": {
+            "host_syncs_per_step": 1.0,
+            "retraces_after_warmup": 0,
+            "no_breach_before_inject": True,
+            "give_up_first_breach_window": first_breach["give_up_rate"],
+            "p99_first_breach_window": first_breach["p99_latency"],
+        },
+    }
+    path = OUT_QUICK if quick else OUT
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+
+    # dashboard inputs: digest/health/SLO instants + fleet status JSON
+    obs.digests.emit()
+    obs.health_registry.emit()
+    export_trace("fleet", quick)
+    status_path = os.path.join(
+        os.path.dirname(__file__),
+        f"fleet_status{'_quick' if quick else ''}.json",
+    )
+    with open(status_path, "w") as f:
+        json.dump(status, f, indent=1, sort_keys=True, default=str)
+    print(f"# fleet status: {status_path}")
+    emit(
+        "fleet.health",
+        0.0,
+        f"give_up@{first_breach['give_up_rate']};"
+        f"p99@{first_breach['p99_latency']};json={os.path.basename(path)}",
+    )
+    return out
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -37,6 +37,7 @@ REGISTRY: list[tuple[str, str, str, dict]] = [
     ("readout.sweep", "readout_sweep", "main", {}),
     ("serving.traffic", "serving_traffic", "main", {}),
     ("fault.tolerance", "fault_tolerance", "main", {}),
+    ("fleet.health", "fleet_health", "main", {}),
 ]
 
 # Benchmarks whose entry accepts quick=True (CI smoke mode).
@@ -46,11 +47,146 @@ QUICK_CAPABLE = {
     "readout.sweep",
     "serving.traffic",
     "fault.tolerance",
+    "fleet.health",
+}
+
+# --check-baselines: declarative quick-vs-committed comparison table.
+#
+# Quick and full runs use different model/stream sizes, so raw
+# magnitudes are NOT comparable; each check names a key that is either
+# a hard contract (mode "eq": must match the committed value exactly),
+# scale-invariant within a declared relative tolerance (mode "rel"),
+# or a ratio with a floor (mode "min").  Key paths resolve dotted
+# segments longest-prefix-first so literal dotted key names (e.g.
+# "sigma0.7__logit_rmse") resolve correctly.
+#   (key_path, mode, tolerance_or_floor)
+BASELINE_CHECKS: dict[str, tuple[str, str, list[tuple[str, str, float]]]] = {
+    "deploy.throughput": ("BENCH_deploy.json", "BENCH_deploy_quick.json", [
+        ("pipeline__host_syncs", "eq", 0.0),
+        ("pipeline__warm_compiles", "eq", 0.0),
+        ("speedup_warm", "min", 1.0),
+        ("speedup_cold", "min", 1.0),
+        ("pipeline__rms_cell_error_lsb", "rel", 0.10),
+        ("baseline__rms_cell_error_lsb", "rel", 0.10),
+        ("pipeline__mean_iterations", "rel", 0.10),
+    ]),
+    "cim.inference": ("BENCH_cim.json", "BENCH_cim_quick.json", [
+        ("harp.deploy__rms_cell_error_lsb", "rel", 0.15),
+        ("cw_sc.deploy__rms_cell_error_lsb", "rel", 0.15),
+        ("harp.analog.sigma0__logit_rmse", "rel", 0.50),
+        ("harp.analog.sigma0.7__logit_rmse", "rel", 0.50),
+        ("serving__planes_per_token", "eq", 0.0),
+    ]),
+    "readout.sweep": ("BENCH_readout.json", "BENCH_readout_quick.json", [
+        ("harp.clean.rms_cell_lsb", "rel", 0.15),
+        ("harp.drifted.rms_cell_lsb", "rel", 0.15),
+        ("harp.calibrated.rms_cell_lsb", "rel", 0.15),
+        ("mra.drifted.rms_cell_lsb", "rel", 0.25),
+        ("mra.calibrated.rms_cell_lsb", "rel", 0.25),
+    ]),
+    "serving.traffic": ("BENCH_serving.json", "BENCH_serving_quick.json", [
+        ("digital.counters.host_syncs_per_step", "eq", 0.0),
+        ("digital.counters.retraces_after_warmup", "eq", 0.0),
+        ("analog.counters.host_syncs_per_step", "eq", 0.0),
+        ("analog.counters.retraces_after_warmup", "eq", 0.0),
+        ("config.rms_cell_error_lsb", "rel", 0.15),
+    ]),
+    "fault.tolerance": ("BENCH_faults.json", "BENCH_faults_quick.json", [
+        ("contracts.host_syncs_per_deploy", "eq", 0.0),
+        ("contracts.zero_fault_bit_identical", "eq", 0.0),
+        ("config.give_up_pulses", "eq", 0.0),
+    ]),
+    "fleet.health": ("BENCH_fleet.json", "BENCH_fleet_quick.json", [
+        ("contracts.host_syncs_per_step", "eq", 0.0),
+        ("contracts.retraces_after_warmup", "eq", 0.0),
+        ("contracts.no_breach_before_inject", "eq", 0.0),
+        ("contracts.give_up_first_breach_window", "eq", 0.0),
+        ("config.inject_window", "eq", 0.0),
+    ]),
 }
 
 
 def names() -> list[str]:
     return [name for name, _, _, _ in REGISTRY]
+
+
+def _resolve_key(doc, path: str):
+    """Resolve a dotted key path, longest key prefix first, so literal
+    dotted key names inside the json resolve too.  Returns None when
+    any segment is missing."""
+    if not path:
+        return doc
+    if not isinstance(doc, dict):
+        return None
+    parts = path.split(".")
+    for i in range(len(parts), 0, -1):
+        head = ".".join(parts[:i])
+        if head in doc:
+            rest = ".".join(parts[i:])
+            if not rest:
+                return doc[head]
+            found = _resolve_key(doc[head], rest)
+            if found is not None:
+                return found
+    return None
+
+
+def check_baselines(selected_names: list[str] | None = None) -> int:
+    """Compare fresh quick metrics against the committed BENCH json.
+
+    For every BASELINE_CHECKS entry whose committed baseline exists:
+    run the quick benchmark if its quick json is missing (CI runs the
+    quick smokes first, so this is normally a pure file comparison),
+    then evaluate each declared check.  Returns the number of failed
+    checks; prints one grep-able CSV row per check:
+    ``check,<bench>,<key>,<mode>,<quick>,<committed>,<ok|FAIL>``.
+    """
+    import json
+    import os
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    failures = 0
+    items = [
+        (n, BASELINE_CHECKS[n])
+        for n in (selected_names or list(BASELINE_CHECKS))
+        if n in BASELINE_CHECKS
+    ]
+    print("check,benchmark,key,mode,quick,committed,status")
+    for bench, (full_file, quick_file, checks) in items:
+        full_path = os.path.join(here, full_file)
+        quick_path = os.path.join(here, quick_file)
+        if not os.path.exists(full_path):
+            print(f"check,{bench},-,-,-,-,SKIP:no-baseline")
+            continue
+        if not os.path.exists(quick_path):
+            by_name = {e[0]: e for e in REGISTRY}
+            _, module, attr, kwargs = by_name[bench]
+            from repro import obs  # noqa: PLC0415
+
+            obs.reset_all()
+            _resolve(module, attr)(**dict(kwargs, quick=True))
+        with open(full_path) as f:
+            full = json.load(f)
+        with open(quick_path) as f:
+            quick = json.load(f)
+        for key, mode, arg in checks:
+            qv, fv = _resolve_key(quick, key), _resolve_key(full, key)
+            ok = qv is not None and fv is not None
+            if ok:
+                if mode == "eq":
+                    ok = qv == fv
+                elif mode == "min":
+                    ok = float(qv) >= arg
+                elif mode == "rel":
+                    ok = abs(float(qv) - float(fv)) <= arg * max(
+                        abs(float(fv)), 1e-9
+                    )
+                else:
+                    raise ValueError(f"unknown check mode {mode!r}")
+            status = "ok" if ok else "FAIL"
+            failures += 0 if ok else 1
+            print(f"check,{bench},{key},{mode},{qv},{fv},{status}")
+    return failures
 
 
 def _resolve(module: str, attr: str):
@@ -65,7 +201,18 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--list", action="store_true", help="print names and exit")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode (quick-capable benchmarks only)")
+    ap.add_argument("--check-baselines", action="store_true",
+                    help="compare fresh quick metrics against committed "
+                         "BENCH_*.json baselines; non-zero exit on drift")
     args = ap.parse_args(argv)
+
+    if args.check_baselines:
+        failures = check_baselines(args.benchmarks or None)
+        if failures:
+            print(f"baseline-check,{failures},FAILED", file=sys.stderr)
+            sys.exit(1)
+        print("baseline-check,0,all-within-tolerance")
+        return
 
     if args.list:
         for n in names():

@@ -166,6 +166,14 @@ class CIMExecutor:
             self._reads[name] += reads
         obs.registry.inc("cim.tokens", n_tokens)
         obs.registry.inc("cim.accesses")
+        # Fleet health gauges (obs.health): served tokens and cumulative
+        # read-disturb traffic per analog array — pure host floats the
+        # tick already tracks, so no extra device work.
+        obs.health_registry.set_gauge("cim.tokens_served", float(self.tokens_served))
+        obs.health_registry.set_gauge(
+            "cim.read_disturb_reads",
+            float(self.tokens_served * self.planes * len(self._analog)),
+        )
         lat_ns, en_pj = self.token_cost()
         obs.charge(
             "serve.analog",

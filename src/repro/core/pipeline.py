@@ -296,6 +296,13 @@ def program_packed_columns(
     ):
         for size in sizes_plan:
             take = min(size, c_total - off)
+            # Host-side shape bookkeeping (ints already on host): the
+            # dispatch-size digest lets the dashboard show how well the
+            # bucket menu fits real models — zero device work.
+            obs.digests.observe(
+                "pipeline.bucket_columns", float(take),
+                lo=0.0, hi=float(DEFAULT_MAX_BUCKET), n_buckets=64,
+            )
             tb = targets[off : off + take]
             db = d2d[off : off + take]
             ub = uids[off : off + take]

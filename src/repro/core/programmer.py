@@ -103,6 +103,11 @@ class DeployReport:
     total_retry_pulses: float = 0.0   # pulses burned on gave-up cells
     remapped_columns: int = 0         # primaries repaired onto spares
     leaves: dict[str, dict[str, float]] = dataclasses.field(default_factory=dict)
+    # Fetched `extra` tree from collect() (per-tile health reductions,
+    # deploy digests).  Deliberately NOT a dataclass field: it is a
+    # transport slot for the fold in deploy_arrays, not part of the
+    # report's stable scalar surface.
+    extra = None
 
     @classmethod
     def collect(
@@ -110,6 +115,7 @@ class DeployReport:
         leaf_stats: "dict[str, WVStats]",
         n_cells: int,
         remapped: "dict[str, jax.Array] | None" = None,
+        extra: Any | None = None,
     ) -> "DeployReport":
         """Device-side report accumulation with exactly ONE host sync.
 
@@ -158,7 +164,12 @@ class DeployReport:
             )
             for name, s in leaf_stats.items()
         }
-        agg_h, per_h, rem_h = pipeline.host_fetch((agg, per, remapped or {}))
+        # `extra` is an arbitrary device tree (per-tile health reductions,
+        # deploy digests — DESIGN.md Sec. 16) riding the SAME single
+        # fetch; the caller folds the fetched host copy afterwards.
+        agg_h, per_h, rem_h, extra_h = pipeline.host_fetch(
+            (agg, per, remapped or {}, extra)
+        )
         report = cls(
             num_columns=sum(int(s.iterations.shape[0]) for s in stats),
             num_cells=sum(int(s.iterations.shape[0]) * n_cells for s in stats),
@@ -174,6 +185,7 @@ class DeployReport:
         }
         for name, v in rem_h.items():
             report.leaves[name]["remapped_columns"] = float(v)
+        report.extra = extra_h
         return report
 
     def merge(self, name: str, stats: WVStats, n_cells: int) -> None:
@@ -236,6 +248,11 @@ class ArrayState:
     dtype: Any
     fault: dev_mod.FaultMap | None = None   # sampled silicon faults
     remap: remap_mod.RemapTable | None = None  # spare-column repair view
+    # Physical column uids (host numpy, one per g row).  Pure address
+    # metadata: uid // columns_per_tile is the tile a column lives on,
+    # which is how scrub-time health maps (obs.health, DESIGN.md
+    # Sec. 16) attribute drift to silicon without any device work.
+    uids: np.ndarray | None = None
 
     def materialize(self, dtype: Any | None = None) -> jax.Array:
         """Programmed conductances -> effective dense weight leaf.
@@ -303,12 +320,63 @@ class _LeafPlan:
         targets: jax.Array | None = None,
         fault: dev_mod.FaultMap | None = None,
         remap: remap_mod.RemapTable | None = None,
+        uids: np.ndarray | None = None,
     ) -> ArrayState:
+        if uids is None:
+            uids = self.uid_base + np.arange(
+                int(self.cols.shape[0]), dtype=np.int64
+            )
         return ArrayState(
             g=g, targets=self.cols if targets is None else targets, d2d=d2d,
             scale=self.scale, layout=self.layout, shape=self.leaf.shape,
             dtype=self.leaf.dtype, fault=fault, remap=remap,
+            uids=np.asarray(uids, np.int64),
         )
+
+
+# Deploy-wide digest configurations (static, so every deploy folds into
+# the same bucket geometry): per-column verify write pulses and WV
+# iterations.  Out-of-range columns clamp into the edge buckets.
+_PULSE_DIGEST = ("deploy.write_pulses_per_column", 0.0, 4096.0, 64)
+_ITER_DIGEST = ("deploy.iterations_per_column", 0.0, 128.0, 64)
+
+
+def _deploy_health_tree(
+    stats_map: "dict[str, WVStats]",
+    uids_map: "dict[str, np.ndarray]",
+    fault_cfg: FaultConfig | None,
+    extra_columns: "dict[str, dict[str, jax.Array]] | None" = None,
+) -> dict[str, Any]:
+    """Device tree of per-tile health reductions + deploy digests.
+
+    Everything here is a jnp reduction (or host uid bookkeeping) meant
+    to ride the deploy's single `host_fetch` via `DeployReport.collect
+    (extra=...)` — building it never synchronizes (DESIGN.md Sec. 16).
+    """
+    cpt = (fault_cfg or FaultConfig()).columns_per_tile
+    tile_ids, tiles = obs.health.tile_deploy_stats(
+        stats_map, uids_map, cpt, extra_columns=extra_columns
+    )
+    stats = list(stats_map.values())
+    pulses = jnp.concatenate([s.write_pulses for s in stats])
+    iters = jnp.concatenate([s.iterations for s in stats])
+    digs = {}
+    for (name, lo, hi, nb), vals in (
+        (_PULSE_DIGEST, pulses), (_ITER_DIGEST, iters),
+    ):
+        digs[name] = obs.StreamingDigest.zeros(lo, hi, nb).add(vals)
+    return {"tile_ids": tile_ids, "tiles": tiles, "digests": digs}
+
+
+def _fold_deploy_health(extra_h: dict[str, Any] | None) -> None:
+    """Fold the FETCHED health tree into the host registries."""
+    if not extra_h:
+        return
+    tile_ids = extra_h["tile_ids"]
+    for metric, vals in extra_h["tiles"].items():
+        obs.health_registry.fold_tiles(f"deploy.{metric}", tile_ids, vals)
+    for name, dig in extra_h["digests"].items():
+        obs.digests.fold(name, dig)
 
 
 def _plan_leaf(name, w, wv_cfg, q_cfg, uid_base) -> _LeafPlan:
@@ -476,8 +544,11 @@ def deploy_arrays(
                 plans, g_blocks, stats_blocks, d2d_blocks, fault_blocks
             ):
                 arrays[plan.name] = plan.state(g, d2d, fault=fb)
+            stats_map = {p.name: s for p, s in zip(plans, stats_blocks)}
+            uids_map = {p.name: arrays[p.name].uids for p in plans}
             report = DeployReport.collect(
-                {p.name: s for p, s in zip(plans, stats_blocks)}, wv_cfg.n_cells
+                stats_map, wv_cfg.n_cells,
+                extra=_deploy_health_tree(stats_map, uids_map, fault_cfg),
             )
         elif batched:
             # Two-pass spare-column deploy (DESIGN.md Sec. 15).  Pass A
@@ -537,11 +608,12 @@ def deploy_arrays(
             )
             remapped: dict[str, jax.Array] = {}
             combined: dict[str, WVStats] = {}
+            remap_flags: dict[str, jax.Array] = {}
             cat = lambda a, b: jnp.concatenate([a, b])  # noqa: E731
-            for plan, c, cand, g, st, d2d, fb, sg, sst, sd2d, sfb in zip(
-                plans, c_counts, cands, g_blocks, stats_blocks, d2d_blocks,
-                fault_blocks, sg_blocks, sstats_blocks, sd2d_blocks,
-                sfault_blocks,
+            for plan, ua, c, cand, g, st, d2d, fb, sg, sst, sd2d, sfb in zip(
+                plans, uid_arrays, c_counts, cands, g_blocks, stats_blocks,
+                d2d_blocks, fault_blocks, sg_blocks, sstats_blocks,
+                sd2d_blocks, sfault_blocks,
             ):
                 table = remap_mod.build_table(
                     st.gave_up, cand, sst.gave_up, remap_cfg.min_gave_up
@@ -554,13 +626,23 @@ def deploy_arrays(
                         jax.tree.map(cat, fb, sfb) if fb is not None else None
                     ),
                     remap=table,
+                    uids=ua,
                 )
                 combined[plan.name] = jax.tree.map(cat, st, sst)
-                remapped[plan.name] = jnp.sum(
-                    (~table.active[:c]).astype(jnp.float32)
+                not_active = (~table.active[:c]).astype(jnp.float32)
+                remapped[plan.name] = jnp.sum(not_active)
+                # Per-column remap flags (physical order: primaries then
+                # spares) for the per-tile health map.
+                remap_flags[plan.name] = jnp.concatenate(
+                    [not_active, jnp.zeros((len(ua) - c,), jnp.float32)]
                 )
+            uids_map = {p.name: arrays[p.name].uids for p in plans}
             report = DeployReport.collect(
-                combined, wv_cfg.n_cells, remapped=remapped
+                combined, wv_cfg.n_cells, remapped=remapped,
+                extra=_deploy_health_tree(
+                    combined, uids_map, fault_cfg,
+                    extra_columns={"remapped_columns": remap_flags},
+                ),
             )
         else:
             report = DeployReport()
@@ -570,6 +652,10 @@ def deploy_arrays(
                 arrays[plan.name] = state
         sp["columns"] = report.num_columns
         sp["rms_cell_error_lsb"] = report.rms_cell_error_lsb
+    # Health/digest fold (DESIGN.md Sec. 16): the per-tile reductions
+    # and deploy digests were fetched BY the report's single host sync;
+    # folding them here is pure host work.
+    _fold_deploy_health(report.extra)
     # Telemetry attribution (DESIGN.md Sec. 14): all values above were
     # already fetched by the report's host sync(s) — pure host floats.
     obs.registry.fold(

@@ -117,6 +117,11 @@ class RefreshOutcome:
     program_latency_ns: float = 0.0     # critical path: max over columns
     program_energy_pj: float = 0.0
     write_pulses: float = 0.0
+    # Give-up accounting (DESIGN.md Secs. 15/16): cells the bounded-
+    # retry budget declared unprogrammable during THIS refresh, and the
+    # fine pulses burned on them — the fleet give-up-rate SLO signal.
+    gave_up_cells: float = 0.0
+    retry_pulses: float = 0.0
 
     @property
     def maintenance_energy_pj(self) -> float:
@@ -189,8 +194,9 @@ def _reprogram_subset(
     cost: CircuitCost,
     drift_cfg: DriftConfig,
     fault: dev_mod.FaultMap | None = None,
-) -> tuple[CellState, float, float, float]:
-    """Re-program the masked columns; returns (state, lat, energy, pulses).
+) -> tuple[CellState, float, float, float, float, float]:
+    """Re-program the masked columns; returns
+    (state, lat, energy, pulses, gave_up_cells, retry_pulses).
 
     Wear-degraded step efficiency feeds `program_columns` through its
     d2d argument, so an old array genuinely takes more WV iterations to
@@ -203,7 +209,7 @@ def _reprogram_subset(
     c, n = targets.shape
     idx = np.nonzero(mask)[0]
     if len(idx) == 0:
-        return state, 0.0, 0.0, 0.0
+        return state, 0.0, 0.0, 0.0, 0.0, 0.0
     idx_p = _pad_pow2(idx, c)
     sub_targets = targets[idx_p]
     sub_d2d = effective_d2d(state, drift_cfg)[idx_p]
@@ -234,10 +240,19 @@ def _reprogram_subset(
     new_state = reset_programmed(
         k_state, state, g_new, refreshed, pulses_cell, cfg.device, drift_cfg
     )
-    lat = float(jnp.max(stats.latency_ns[rows]))
-    en = float(jnp.sum(stats.energy_pj[rows]))
-    pulses = float(jnp.sum(stats.write_pulses[rows]))
-    return new_state, lat, en, pulses
+    # One consolidated fetch for the scalar outcome — the give-up sums
+    # (DESIGN.md Sec. 16) ride the same device_get the cost accounting
+    # was already paying, not their own.
+    lat, en, pulses, gave_up, retry = (
+        float(v) for v in jax.device_get((
+            jnp.max(stats.latency_ns[rows]),
+            jnp.sum(stats.energy_pj[rows]),
+            jnp.sum(stats.write_pulses[rows]),
+            jnp.sum(stats.gave_up[rows]),
+            jnp.sum(stats.retry_pulses[rows]),
+        ))
+    )
+    return new_state, lat, en, pulses, gave_up, retry
 
 
 def apply_refresh(
@@ -287,11 +302,13 @@ def apply_refresh(
     else:
         raise ValueError(policy)
 
-    state, lat, en, pulses = _reprogram_subset(
+    state, lat, en, pulses, gave_up, retry = _reprogram_subset(
         k_p, state, targets, mask, cfg, cost, drift_cfg, fault=fault
     )
     outcome.n_reprogrammed = int(mask.sum())
     outcome.program_latency_ns = lat
     outcome.program_energy_pj = en
     outcome.write_pulses = pulses
+    outcome.gave_up_cells = gave_up
+    outcome.retry_pulses = retry
     return state, outcome

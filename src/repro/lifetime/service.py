@@ -52,6 +52,9 @@ class EpochRecord:
     maintenance_latency_ns: float
     write_pulses: float
     eval_metric: float | None = None
+    gave_up_cells: float = 0.0       # refresh give-ups (SLO signal)
+    retry_pulses: float = 0.0        # pulses burned on gave-up cells
+    refresh_debt_epochs: float = 0.0  # max epochs since any leaf scrubbed
 
 
 @dataclasses.dataclass
@@ -113,6 +116,7 @@ class LifetimeSimulator:
         refresh_cfg: RefreshConfig | None = None,
         on_refresh: Callable[[Any], None] | None = None,
         traffic_fn: Callable[[], dict[str, float]] | None = None,
+        columns_per_tile: int = 128,
     ):
         self.key = key
         self.deployed = deployed
@@ -120,9 +124,16 @@ class LifetimeSimulator:
         self.refresh_cfg = refresh_cfg or RefreshConfig()
         self.on_refresh = on_refresh
         self.traffic_fn = traffic_fn
+        # Tile geometry for the scrub-time health maps (obs.health).
+        # Must match the deploy's FaultConfig.columns_per_tile so drift
+        # maps land on the same tile ids as the deploy's give-up maps.
+        self.columns_per_tile = int(columns_per_tile)
         self.t_s = 0.0
         self.epoch = 0
         self._scrub_cursor = 0
+        # Refresh debt: epochs since each leaf last sat in the scrub
+        # window (0 = scrubbed by the deploy itself).
+        self._last_scrub = {name: 0 for name in deployed.arrays}
         k = key
         self.states = {}
         for name, arr in deployed.arrays.items():
@@ -135,28 +146,83 @@ class LifetimeSimulator:
         for name, st in self.states.items():
             self.deployed.update_array(name, st.g)
 
-    def _rms_drift_lsb(self) -> float:
-        num = 0.0
-        den = 0
-        for name, st in self.states.items():
+    # Drift-digest bucket geometry (static so every epoch/replica folds
+    # into the same histogram): per-column RMS drift in cell LSB.
+    _DRIFT_DIGEST = ("lifetime.drift_lsb", 0.0, 8.0, 64)
+
+    def _epoch_health(self) -> tuple[float, float]:
+        """Global drift RMS + stuck fraction, with health maps riding.
+
+        All reductions are device-side jnp ops; ONE `metrics.fetch` at
+        the end transfers the scalars, the per-tile sums, and the
+        drift digest together (DESIGN.md Sec. 16).  The old per-leaf
+        `float()` pulls did one sync per leaf; this does one per epoch.
+        Per-tile attribution uses the deploy's physical column uids
+        (`ArrayState.uids`, host numpy) — remapped-away rows count
+        neither drift nor tiles (a parked stuck column is not drift the
+        model experiences).
+        """
+        import numpy as np
+
+        col_e2, col_cnt, col_uids = [], [], []
+        stuck_bad = jnp.zeros((), jnp.float32)
+        stuck_tot = 0
+        have_uids = all(
+            a.uids is not None for a in self.deployed.arrays.values()
+        )
+        for name in sorted(self.states):
+            st = self.states[name]
             arr = self.deployed.arrays[name]
             err = st.g - arr.targets.astype(jnp.float32)
             if arr.remap is not None:
-                # Remapped arrays: only physical rows carrying live
-                # weight count — a remapped-away stuck column parked at
-                # its pinned level is not drift the model experiences.
-                act = arr.remap.active
-                num += float(jnp.sum(jnp.where(act[:, None], err * err, 0.0)))
-                den += int(jnp.sum(act)) * err.shape[1]
+                act = arr.remap.active.astype(jnp.float32)
+                col_e2.append(jnp.sum(err * err, axis=1) * act)
+                col_cnt.append(act * err.shape[1])
             else:
-                num += float(jnp.sum(err * err))
-                den += err.size
-        return (num / max(den, 1)) ** 0.5
-
-    def _stuck_frac(self) -> float:
-        tot = sum(st.stuck.size for st in self.states.values())
-        bad = sum(float(jnp.sum(st.stuck)) for st in self.states.values())
-        return bad / max(tot, 1)
+                col_e2.append(jnp.sum(err * err, axis=1))
+                col_cnt.append(
+                    jnp.full((err.shape[0],), float(err.shape[1]), jnp.float32)
+                )
+            if have_uids:
+                col_uids.append(np.asarray(arr.uids, np.int64))
+            stuck_bad = stuck_bad + jnp.sum(st.stuck)
+            stuck_tot += int(st.stuck.size)
+        e2 = jnp.concatenate(col_e2)
+        cnt = jnp.concatenate(col_cnt)
+        col_rms = jnp.sqrt(e2 / jnp.maximum(cnt, 1.0))
+        dig_name, lo, hi, nb = self._DRIFT_DIGEST
+        tree: dict[str, Any] = {
+            "num": jnp.sum(e2),
+            "den": jnp.sum(cnt),
+            "stuck": stuck_bad,
+            "digest": obs.StreamingDigest.zeros(lo, hi, nb).add_weighted(
+                col_rms, (cnt > 0).astype(jnp.float32)
+            ),
+        }
+        tile_ids = None
+        if have_uids and col_uids:
+            uids = np.concatenate(col_uids)
+            tile_ids, inv = np.unique(
+                uids // self.columns_per_tile, return_inverse=True
+            )
+            n_tiles = int(tile_ids.shape[0])
+            tree["tile_e2"] = obs.health.tile_reduce(e2, inv, n_tiles)
+            tree["tile_cnt"] = obs.health.tile_reduce(cnt, inv, n_tiles)
+        # THE per-epoch health sync (rides nothing else — but replaces
+        # the old 2-pulls-per-leaf pattern with a single fetch).
+        h = obs.metrics.fetch(tree, counter="lifetime.health_syncs")
+        rms = (float(h["num"]) / max(float(h["den"]), 1.0)) ** 0.5
+        stuck = float(h["stuck"]) / max(stuck_tot, 1)
+        obs.digests.put(dig_name, h["digest"])
+        if tile_ids is not None:
+            tile_rms = np.sqrt(
+                np.asarray(h["tile_e2"])
+                / np.maximum(np.asarray(h["tile_cnt"]), 1.0)
+            )
+            obs.health_registry.fold_tiles(
+                "lifetime.drift_rms_lsb", tile_ids, tile_rms, mode="last"
+            )
+        return rms, stuck
 
     def step_epoch(
         self,
@@ -180,7 +246,7 @@ class LifetimeSimulator:
         """
         wv_cfg, cost = self.deployed.wv_cfg, self.deployed.cost
         flagged = reprogrammed = 0
-        en_v = en_p = lat = pulses = 0.0
+        en_v = en_p = lat = pulses = gave_up = retry = 0.0
         traffic = self.traffic_fn() if self.traffic_fn is not None else {}
         applied_reads = []
         names = sorted(self.states)
@@ -227,11 +293,16 @@ class LifetimeSimulator:
                     en_p += out.program_energy_pj
                     lat = max(lat, out.maintenance_latency_ns)  # in parallel
                     pulses += out.write_pulses
+                    gave_up += out.gave_up_cells
+                    retry += out.retry_pulses
+                    self._last_scrub[name] = self.epoch
                 self.states[name] = st
             sp["flagged"] = flagged
             sp["reprogrammed"] = reprogrammed
         obs.registry.inc("lifetime.scrub_epochs")
         obs.registry.inc("lifetime.reprogrammed_columns", reprogrammed)
+        obs.registry.inc("lifetime.gave_up_cells", gave_up)
+        obs.registry.inc("lifetime.retry_pulses", retry)
         obs.charge(
             "lifetime.scrub",
             energy_pj=en_v + en_p,
@@ -243,6 +314,13 @@ class LifetimeSimulator:
         self.t_s += dt_s
         self.epoch += 1
         self._sync_deployed()
+        # Refresh debt (scrub backlog): epochs since each leaf was last
+        # in the scrub window — the scrub-backlog SLO signal.
+        debt = max(
+            (self.epoch - 1 - e for e in self._last_scrub.values()),
+            default=0.0,
+        )
+        obs.health_registry.set_gauge("lifetime.refresh_debt_epochs", debt)
         params = None
         if reprogrammed and self.on_refresh is not None:
             params = self.deployed.materialize()
@@ -252,6 +330,7 @@ class LifetimeSimulator:
             if params is None:
                 params = self.deployed.materialize()
             metric = float(eval_fn(params))
+        rms_drift, stuck = self._epoch_health()
         return EpochRecord(
             epoch=self.epoch - 1,
             t_s=self.t_s,
@@ -259,8 +338,8 @@ class LifetimeSimulator:
                 sum(applied_reads) / len(applied_reads)
                 if applied_reads else float(reads_per_column)
             ),
-            rms_drift_lsb=self._rms_drift_lsb(),
-            stuck_frac=self._stuck_frac(),
+            rms_drift_lsb=rms_drift,
+            stuck_frac=stuck,
             columns_flagged=flagged,
             columns_reprogrammed=reprogrammed,
             verify_energy_pj=en_v,
@@ -268,6 +347,9 @@ class LifetimeSimulator:
             maintenance_latency_ns=lat,
             write_pulses=pulses,
             eval_metric=metric,
+            gave_up_cells=gave_up,
+            retry_pulses=retry,
+            refresh_debt_epochs=float(debt),
         )
 
     def run(

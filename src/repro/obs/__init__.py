@@ -10,8 +10,16 @@ One observability substrate for the whole stack (DESIGN.md Sec. 14):
   trace-event JSON (`trace.span` / `trace.instant` / `trace.export`).
 * `obs.ledger`   — per-phase energy/latency/reads/tokens attribution
   from the circuit cost model (`obs.charge`), mirrored into the trace.
+* `obs.digest`   — fixed-bucket streaming histograms (`StreamingDigest`
+  pytrees accumulate in-jit / on host; the `digests` registry holds the
+  folded percentile views) for p50/p95/p99 without per-request arrays.
+* `obs.health`   — per-tile health maps reduced device-side on existing
+  syncs + declarative `SLORule`/`SLOPolicy` ceilings evaluated
+  host-side over `fleet_status()` (DESIGN.md Sec. 16).
 * `obs.report`   — `python -m repro.obs.report TRACE.json` renders the
-  per-phase run summary table.
+  per-phase run summary table (+ digest percentiles, SLO breaches).
+* `obs.dashboard`— `python -m repro.obs.dashboard` joins TRACE files,
+  ledger charges, and fleet-status snapshots into an HTML/text report.
 
 The zero-extra-sync rule: spans/charges are host-side only, and device
 metrics are only fetched on host syncs the hot path already performs.
@@ -24,17 +32,28 @@ from __future__ import annotations
 
 import contextlib
 
-from . import ledger, metrics, trace
+from . import digest, health, ledger, metrics, trace
+from .digest import StreamingDigest, digests
+from .health import SLOPolicy, SLORule, fleet_status
+from .health import health as health_registry
 from .ledger import charge
 from .metrics import MetricAccumulator, registry
 from .trace import instant, span, tracer
 
 __all__ = [
+    "digest",
+    "health",
     "ledger",
     "metrics",
     "trace",
     "charge",
     "MetricAccumulator",
+    "StreamingDigest",
+    "SLOPolicy",
+    "SLORule",
+    "digests",
+    "fleet_status",
+    "health_registry",
     "registry",
     "instant",
     "span",
@@ -61,7 +80,9 @@ def disabled():
 
 
 def reset_all() -> None:
-    """Fresh telemetry state: events, charges, and counters all zeroed."""
+    """Fresh telemetry state: events, charges, counters, digests, health."""
     trace.reset()
     ledger.reset()
     metrics.reset()
+    digest.reset()
+    health_registry.reset()

@@ -1,0 +1,340 @@
+"""Fixed-bucket streaming histograms for hot-path percentiles.
+
+`StreamingDigest` is a registered pytree holding a fixed-bucket
+histogram (counts + sum + min/max) over a declared value range.  Two
+accumulation paths, one rule — *instrumentation may not add host syncs
+or retraces* (DESIGN.md Sec. 14/16):
+
+* `add(x)` is the traced path: jnp ops only, safe inside jit/scan.
+  The bucket edges (`lo`, `hi`) and bucket count are static aux data,
+  so two digests with the same configuration share a treedef and a
+  warmed dispatch never retraces.  Device digests come back to the
+  host only on a fetch the hot path already performs (the deploy
+  `host_fetch`, the scheduler's per-step token `device_get`).
+* `observe(x)` is the host path: pure numpy, mutating in place.  It is
+  for host-born quantities (wall-clock step latency, TTFT) where no
+  device round-trip exists in the first place.
+
+Quantiles are rank-based over the bucket midpoints: for n observed
+values the q-quantile estimate is the midpoint of the bucket holding
+the rank-``floor(q*(n-1))`` value, which is within half a bucket width
+of the exact order statistic for any in-range input distribution
+(tests/test_digest_properties.py holds this as a property).  Merging
+is elementwise count addition — commutative and associative — so
+per-replica digests fold into fleet digests without per-request
+arrays.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, Mapping
+
+import numpy as np
+
+__all__ = [
+    "StreamingDigest",
+    "DigestRegistry",
+    "digests",
+    "observe",
+    "snapshot",
+    "reset",
+]
+
+_QUANTILES = (0.50, 0.95, 0.99)
+
+
+def _register():
+    """Register the pytree node lazily so importing the digest module
+    (e.g. from the stdlib-only dashboard) does not require jax."""
+    try:
+        import jax
+    except Exception:  # pragma: no cover - jax-less dashboard path
+        return
+    try:
+        jax.tree_util.register_pytree_node_class(StreamingDigest)
+    except ValueError:  # pragma: no cover - already registered
+        pass
+
+
+class StreamingDigest:
+    """A fixed-bucket histogram over ``[lo, hi)`` with ``n`` buckets.
+
+    Values below ``lo`` clamp into the first bucket, values at or above
+    ``hi`` into the last, so the count never leaks; the one-bucket
+    quantile guarantee holds for in-range values.
+    """
+
+    def __init__(self, lo: float, hi: float, counts, total, vmin, vmax):
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.counts = counts
+        self.total = total
+        self.vmin = vmin
+        self.vmax = vmax
+
+    # ------------------------------------------------------------ ctor
+    @classmethod
+    def zeros(cls, lo: float, hi: float, n_buckets: int) -> "StreamingDigest":
+        """Device-side (jnp) zero digest for use inside jitted paths."""
+        import jax.numpy as jnp
+
+        assert hi > lo and n_buckets >= 1, (lo, hi, n_buckets)
+        return cls(
+            lo, hi,
+            jnp.zeros((n_buckets,), jnp.float32),
+            jnp.zeros((), jnp.float32),
+            jnp.full((), jnp.inf, jnp.float32),
+            jnp.full((), -jnp.inf, jnp.float32),
+        )
+
+    @classmethod
+    def host(cls, lo: float, hi: float, n_buckets: int) -> "StreamingDigest":
+        """Host-side (numpy) zero digest — never touches the device."""
+        assert hi > lo and n_buckets >= 1, (lo, hi, n_buckets)
+        return cls(
+            lo, hi,
+            np.zeros((n_buckets,), np.float32),
+            np.zeros((), np.float32),
+            np.float32(np.inf),
+            np.float32(-np.inf),
+        )
+
+    # ------------------------------------------------------- properties
+    @property
+    def n_buckets(self) -> int:
+        return int(self.counts.shape[0])
+
+    @property
+    def width(self) -> float:
+        return (self.hi - self.lo) / self.n_buckets
+
+    @property
+    def count(self) -> float:
+        return float(np.sum(np.asarray(self.counts)))
+
+    # ------------------------------------------------------ accumulate
+    def add(self, x) -> "StreamingDigest":
+        """Traced-safe accumulation: returns a NEW digest (jnp ops)."""
+        import jax.numpy as jnp
+
+        x = jnp.asarray(x, jnp.float32).ravel()
+        idx = jnp.clip(
+            jnp.floor((x - self.lo) / self.width).astype(jnp.int32),
+            0, self.n_buckets - 1,
+        )
+        return StreamingDigest(
+            self.lo, self.hi,
+            self.counts.at[idx].add(1.0),
+            self.total + jnp.sum(x),
+            jnp.minimum(self.vmin, jnp.min(x, initial=jnp.inf)),
+            jnp.maximum(self.vmax, jnp.max(x, initial=-jnp.inf)),
+        )
+
+    def add_weighted(self, x, weights) -> "StreamingDigest":
+        """Traced-safe accumulation with per-value weights (counts).
+
+        Used for device-side histograms where each value carries a
+        multiplicity (e.g. "this tile contributed w cells at this
+        drift level"); zero-weight entries contribute nothing,
+        including to min/max.
+        """
+        import jax.numpy as jnp
+
+        x = jnp.asarray(x, jnp.float32).ravel()
+        w = jnp.asarray(weights, jnp.float32).ravel()
+        idx = jnp.clip(
+            jnp.floor((x - self.lo) / self.width).astype(jnp.int32),
+            0, self.n_buckets - 1,
+        )
+        live = w > 0
+        return StreamingDigest(
+            self.lo, self.hi,
+            self.counts.at[idx].add(w),
+            self.total + jnp.sum(x * w),
+            jnp.minimum(
+                self.vmin, jnp.min(jnp.where(live, x, jnp.inf), initial=jnp.inf)
+            ),
+            jnp.maximum(
+                self.vmax,
+                jnp.max(jnp.where(live, x, -jnp.inf), initial=-jnp.inf),
+            ),
+        )
+
+    def observe(self, x) -> None:
+        """Host-side accumulation (numpy, in place) — zero device work."""
+        x = np.asarray(x, np.float32).ravel()
+        if x.size == 0:
+            return
+        idx = np.clip(
+            np.floor((x - self.lo) / self.width).astype(np.int64),
+            0, self.n_buckets - 1,
+        )
+        np.add.at(self.counts, idx, 1.0)
+        self.total = np.float32(self.total + np.sum(x))
+        self.vmin = np.float32(min(float(self.vmin), float(np.min(x))))
+        self.vmax = np.float32(max(float(self.vmax), float(np.max(x))))
+
+    def merge(self, other: "StreamingDigest") -> "StreamingDigest":
+        """Elementwise merge — requires identical bucket configuration."""
+        assert (self.lo, self.hi, self.n_buckets) == (
+            other.lo, other.hi, other.n_buckets,
+        ), "digest merge requires identical bucket configuration"
+        return StreamingDigest(
+            self.lo, self.hi,
+            np.asarray(self.counts) + np.asarray(other.counts),
+            np.asarray(self.total) + np.asarray(other.total),
+            np.minimum(np.asarray(self.vmin), np.asarray(other.vmin)),
+            np.maximum(np.asarray(self.vmax), np.asarray(other.vmax)),
+        )
+
+    # -------------------------------------------------------- quantiles
+    def quantile(self, q: float) -> float | None:
+        """Rank-based quantile estimate (bucket midpoint); None if empty."""
+        counts = np.asarray(self.counts, np.float64)
+        n = counts.sum()
+        if n <= 0:
+            return None
+        rank = int(np.floor(float(q) * (n - 1)))
+        cum = np.cumsum(counts)
+        b = int(np.searchsorted(cum, rank + 1, side="left"))
+        b = min(b, self.n_buckets - 1)
+        return float(self.lo + (b + 0.5) * self.width)
+
+    def summary(self) -> dict[str, Any]:
+        """JSON-safe summary: count/mean/min/max + p50/p95/p99.
+
+        Empty digests report ``count: 0`` with null percentiles — the
+        report/dashboard layers render that corner explicitly rather
+        than inventing numbers.
+        """
+        n = self.count
+        out: dict[str, Any] = {
+            "lo": self.lo, "hi": self.hi, "n_buckets": self.n_buckets,
+            "count": n,
+        }
+        if n > 0:
+            out["mean"] = float(np.asarray(self.total)) / n
+            out["min"] = float(np.asarray(self.vmin))
+            out["max"] = float(np.asarray(self.vmax))
+        else:
+            out["mean"] = None
+            out["min"] = None
+            out["max"] = None
+        for q in _QUANTILES:
+            out[f"p{int(q * 100)}"] = self.quantile(q)
+        return out
+
+    # ------------------------------------------------------------ pytree
+    def tree_flatten(self):
+        return (
+            (self.counts, self.total, self.vmin, self.vmax),
+            (self.lo, self.hi),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        lo, hi = aux
+        return cls(lo, hi, *children)
+
+    def __repr__(self) -> str:
+        return (
+            f"StreamingDigest(lo={self.lo}, hi={self.hi}, "
+            f"n_buckets={self.n_buckets}, count={self.count})"
+        )
+
+
+class DigestRegistry:
+    """Host-side named digests: the fold target for everything fetched.
+
+    `observe` is for host-born values; `fold` merges an already-fetched
+    device digest (numpy leaves — folding a live jnp digest would be a
+    hidden sync, so callers fetch first on an existing chokepoint).
+    """
+
+    def __init__(self):
+        self._digests: dict[str, StreamingDigest] = {}
+
+    def ensure(self, name: str, lo: float, hi: float,
+               n_buckets: int = 64) -> StreamingDigest:
+        d = self._digests.get(name)
+        if d is None:
+            d = StreamingDigest.host(lo, hi, n_buckets)
+            self._digests[name] = d
+        return d
+
+    def observe(self, name: str, x, *, lo: float, hi: float,
+                n_buckets: int = 64) -> None:
+        self.ensure(name, lo, hi, n_buckets).observe(x)
+
+    def put(self, name: str, fetched: StreamingDigest) -> None:
+        """Replace the named slot with a fetched digest.
+
+        For CUMULATIVE device digests (a jit carry that already holds
+        the whole history): re-folding one of those every fetch would
+        double-count, so the rider replaces instead of merging.
+        """
+        self._digests[name] = StreamingDigest(
+            fetched.lo, fetched.hi,
+            np.asarray(fetched.counts, np.float32).copy(),
+            np.float32(np.asarray(fetched.total)),
+            np.float32(np.asarray(fetched.vmin)),
+            np.float32(np.asarray(fetched.vmax)),
+        )
+
+    def fold(self, name: str, fetched: StreamingDigest) -> None:
+        """Merge a fetched (numpy-leaved) digest into the named slot."""
+        d = self._digests.get(name)
+        if d is None:
+            self._digests[name] = StreamingDigest(
+                fetched.lo, fetched.hi,
+                np.asarray(fetched.counts, np.float32).copy(),
+                np.float32(np.asarray(fetched.total)),
+                np.float32(np.asarray(fetched.vmin)),
+                np.float32(np.asarray(fetched.vmax)),
+            )
+        else:
+            self._digests[name] = d.merge(fetched)
+
+    def get(self, name: str) -> StreamingDigest | None:
+        return self._digests.get(name)
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._digests))
+
+    def snapshot(self) -> dict[str, dict[str, Any]]:
+        return {n: d.summary() for n, d in sorted(self._digests.items())}
+
+    def emit(self) -> None:
+        """Mirror every digest summary into the trace as cat="digest"
+        instants so report/dashboard can read percentiles from the
+        exported TRACE json without access to process state."""
+        from . import trace
+
+        for name, d in sorted(self._digests.items()):
+            trace.instant(f"digest.{name}", cat="digest", **d.summary())
+
+    def reset(self, prefix: str | None = None) -> None:
+        if prefix is None:
+            self._digests = {}
+        else:
+            for k in [k for k in self._digests if k.startswith(prefix)]:
+                del self._digests[k]
+
+
+# The global registry (one process = one digest namespace).
+digests = DigestRegistry()
+
+
+def observe(name: str, x, *, lo: float, hi: float, n_buckets: int = 64) -> None:
+    digests.observe(name, x, lo=lo, hi=hi, n_buckets=n_buckets)
+
+
+def snapshot() -> dict[str, dict[str, Any]]:
+    return digests.snapshot()
+
+
+def reset(prefix: str | None = None) -> None:
+    digests.reset(prefix)
+
+
+_register()

@@ -9,6 +9,13 @@ reads, tokens) charged to that phase.  This is the "where did the
 reads, joules, and milliseconds go" view of a run — the paper's
 latency/energy headline numbers, per phase, from one artifact.
 
+When the trace carries fleet-observability events, two extra sections
+follow the phase table: digest percentiles (cat="digest" instants
+written by `obs.digests.emit()` — p50/p95/p99 per named histogram,
+with empty digests rendered explicitly as count 0) and SLO breaches
+(cat="slo" instants written by `obs.SLOPolicy.evaluate` — one row per
+rule with breach count and last observed value).
+
 Pure stdlib (no jax import) so it runs anywhere, including the CI
 smoke step, which fails the build when a freshly emitted trace cannot
 be parsed or contains no spans.
@@ -21,7 +28,10 @@ import json
 import sys
 from typing import Any
 
-__all__ = ["load", "summarize", "render", "main"]
+__all__ = [
+    "load", "summarize", "render",
+    "digest_rows", "slo_rows", "render_digests", "render_slo", "main",
+]
 
 _LEDGER_FIELDS = ("energy_pj", "latency_ns", "reads", "tokens")
 
@@ -76,12 +86,100 @@ def summarize(doc: dict[str, Any]) -> list[dict[str, Any]]:
     return out
 
 
+def digest_rows(doc: dict[str, Any]) -> list[dict[str, Any]]:
+    """One row per digest name from cat="digest" instants.
+
+    Digests are cumulative at emit time, so when a trace carries
+    several emits of the same name the LAST one wins (it already
+    contains the earlier counts).  Empty digests (count 0, null
+    percentiles) are kept — the table renders them as "-" rather than
+    dropping the row, so a silent zero-sample digest is visible.
+    """
+    rows: dict[str, dict[str, Any]] = {}
+    for ev in doc["traceEvents"]:
+        if not isinstance(ev, dict) or ev.get("cat") != "digest":
+            continue
+        name = str(ev.get("name", ""))
+        if name.startswith("digest."):
+            name = name[len("digest."):]
+        args = ev.get("args") or {}
+        rows[name] = {
+            "digest": name,
+            "count": float(args.get("count") or 0.0),
+            **{k: args.get(k) for k in ("mean", "p50", "p95", "p99", "max")},
+        }
+    return [rows[k] for k in sorted(rows)]
+
+
+def slo_rows(doc: dict[str, Any]) -> list[dict[str, Any]]:
+    """One row per SLO rule from cat="slo" breach instants."""
+    rows: dict[str, dict[str, Any]] = {}
+    for ev in doc["traceEvents"]:
+        if not isinstance(ev, dict) or ev.get("cat") != "slo":
+            continue
+        args = ev.get("args") or {}
+        name = str(ev.get("name", ""))
+        if name.startswith("slo.breach."):
+            name = name[len("slo.breach."):]
+        r = rows.setdefault(
+            name,
+            {"rule": name, "metric": args.get("metric"),
+             "ceiling": args.get("ceiling"), "breaches": 0,
+             "last_value": None},
+        )
+        r["breaches"] += 1
+        r["last_value"] = args.get("value")
+    return [rows[k] for k in sorted(rows)]
+
+
+def _fmt_opt(v: Any) -> str:
+    return "-" if v is None else _fmt(float(v))
+
+
+def render_digests(rows: list[dict[str, Any]]) -> str:
+    cols = ["digest", "count", "mean", "p50", "p95", "p99", "max"]
+    table = [cols[:]]
+    for r in rows:
+        table.append(
+            [r["digest"], f"{r['count']:,.0f}"]
+            + [_fmt_opt(r[c]) for c in cols[2:]]
+        )
+    return _render_table(table)
+
+
+def render_slo(rows: list[dict[str, Any]]) -> str:
+    cols = ["rule", "metric", "ceiling", "breaches", "last_value"]
+    table = [cols[:]]
+    for r in rows:
+        table.append(
+            [r["rule"], str(r["metric"] or "-"), _fmt_opt(r["ceiling"]),
+             str(r["breaches"]), _fmt_opt(r["last_value"])]
+        )
+    return _render_table(table)
+
+
 def _fmt(v: float) -> str:
     if v == 0.0:
         return "-"
     if abs(v) >= 1e6:
         return f"{v:.3e}"
     return f"{v:,.2f}" if abs(v) < 1e3 else f"{v:,.0f}"
+
+
+def _render_table(table: list[list[str]]) -> str:
+    """Align a header + rows string table (first column left-justified)."""
+    n = len(table[0])
+    widths = [max(len(line[i]) for line in table) for i in range(n)]
+    lines = []
+    for j, line in enumerate(table):
+        lines.append(
+            line[0].ljust(widths[0])
+            + "  "
+            + "  ".join(c.rjust(w) for c, w in zip(line[1:], widths[1:]))
+        )
+        if j == 0:
+            lines.append("-" * len(lines[0]))
+    return "\n".join(lines)
 
 
 def render(rows: list[dict[str, Any]]) -> str:
@@ -93,17 +191,7 @@ def render(rows: list[dict[str, Any]]) -> str:
             [r["phase"], str(r["count"])]
             + [_fmt(r[c]) for c in cols[2:]]
         )
-    widths = [max(len(line[i]) for line in table) for i in range(len(cols))]
-    lines = []
-    for j, line in enumerate(table):
-        lines.append(
-            line[0].ljust(widths[0])
-            + "  "
-            + "  ".join(c.rjust(w) for c, w in zip(line[1:], widths[1:]))
-        )
-        if j == 0:
-            lines.append("-" * len(lines[0]))
-    return "\n".join(lines)
+    return _render_table(table)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -136,6 +224,15 @@ def main(argv: list[str] | None = None) -> int:
         f"# total: {total_ms:,.1f} ms wall across spans, "
         f"{total_e:,.1f} pJ attributed"
     )
+    drows = digest_rows(doc)
+    if drows:
+        print(f"\n# digests ({len(drows)})")
+        print(render_digests(drows))
+    srows = slo_rows(doc)
+    if srows:
+        total_breaches = sum(r["breaches"] for r in srows)
+        print(f"\n# slo breaches ({total_breaches})")
+        print(render_slo(srows))
     return 0
 
 

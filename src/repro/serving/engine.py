@@ -12,6 +12,7 @@ deployment produces ordinary parameter pytrees).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -98,6 +99,7 @@ class ServeEngine:
         """tokens: (B, S) prompt; returns (B, max_new) generated ids."""
         b, s = tokens.shape
         key = key if key is not None else jax.random.PRNGKey(0)
+        t0 = time.perf_counter()
         with obs.span(
             "serve.generate", cat="serve", batch=b, prompt_len=s,
             max_new=max_new,
@@ -122,4 +124,12 @@ class ServeEngine:
                 outs.append(cur)
             out = jnp.concatenate(outs, axis=1)
             sp["generated"] = int(out.shape[0] * out.shape[1])
+        # Host-born wall-clock digest (DESIGN.md Sec. 16): per-token
+        # generate latency percentiles without per-request arrays.
+        obs.digests.observe(
+            "serve.generate_us_per_token",
+            (time.perf_counter() - t0) * 1e6
+            / max(int(out.shape[0] * out.shape[1]), 1),
+            lo=0.0, hi=1e6, n_buckets=128,
+        )
         return out

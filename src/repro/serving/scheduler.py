@@ -132,9 +132,13 @@ class ContinuousScheduler:
         flushes).  Runs on the host between dispatches: it never blocks
         or reshapes the batch.
       device_metrics: compute per-step metrics (active slots, greedy
-        agreement) inside the jitted decode and fetch them on the SAME
-        device_get as the tokens.  Token bits are identical either way;
-        the flag exists so tests can assert that.
+        agreement) and the in-jit batch-occupancy digest inside the
+        jitted decode and fetch them on the SAME device_get as the
+        tokens.  Token bits are identical either way; the flag exists
+        so tests can assert that.
+      name: digest namespace prefix ("serve" by default) — fleet
+        replicas pass distinct names so their latency/TTFT/occupancy
+        digests stay separable and merge into fleet-wide views.
     """
 
     def __init__(
@@ -149,6 +153,7 @@ class ContinuousScheduler:
         maintenance_every: int = 0,
         prefill_cost_steps: float = 1.0,
         device_metrics: bool = True,
+        name: str = "serve",
     ):
         self.engine = engine
         self.cfg = engine.cfg
@@ -170,6 +175,17 @@ class ContinuousScheduler:
         # the tokens — never an extra sync, never a retrace (the flag is
         # fixed per scheduler, so each jit has one stable output treedef).
         self.device_metrics = bool(device_metrics)
+        # Streaming digests (DESIGN.md Sec. 16): `name` prefixes this
+        # scheduler's digest namespace so fleet replicas keep separate
+        # histograms that merge into fleet-wide views.  The batch-
+        # occupancy digest is an in-jit carry, fetched cumulatively on
+        # the per-step token device_get; latency/TTFT/queue digests are
+        # host-born (wall clock / step clock) and never touch the device.
+        self.name = str(name)
+        self._occ_digest = (
+            obs.StreamingDigest.zeros(0.0, n_slots + 1.0, n_slots + 1)
+            if self.device_metrics else None
+        )
 
         cache = init_cache(self.cfg, n_slots, max_len)
         if set(cache) != {"k", "v", "pos"}:
@@ -241,7 +257,7 @@ class ContinuousScheduler:
         cfg, mesh = self.cfg, self.mesh
         device_metrics = self.device_metrics
 
-        def decode(params, cache, cur, rids, gens, master):
+        def decode(params, cache, cur, rids, gens, master, dig):
             self.trace_counts["decode"] += 1  # fires at trace time only
             logits, cache = decode_step(
                 params, cache, {"tokens": cur[:, None]}, cfg, mesh
@@ -265,7 +281,12 @@ class ContinuousScheduler:
                         active & (toks == greedy)
                     ).astype(jnp.float32),
                 }
-            return toks, m, cache
+                # In-jit streaming digest (DESIGN.md Sec. 16): batch
+                # occupancy accumulates inside the compiled step; the
+                # carry stays on device and its cumulative counts ride
+                # the same per-step fetch as the tokens.
+                dig = dig.add(n_active)
+            return toks, m, dig, cache
 
         return decode
 
@@ -281,10 +302,20 @@ class ContinuousScheduler:
     def active_slots(self) -> int:
         return int(np.sum(self._rid >= 0))
 
+    def _digest_hi(self) -> float:
+        """Shared bucket range for the step-clock digests (latency, TTFT,
+        queue delay).  Static per scheduler geometry, so replicas with
+        the same max_len merge their digests fleet-wide."""
+        return 8.0 * self.max_len
+
     def _finish(self, slot: int, t_done: float | None = None) -> None:
         rec = self.records[self._slot_req[slot].rid]
         rec.done_step = self.now if t_done is None else t_done
         self.completed.append(rec)
+        obs.digests.observe(
+            f"{self.name}.latency_steps", rec.latency_steps,
+            lo=0.0, hi=self._digest_hi(), n_buckets=128,
+        )
         self._rid[slot] = -1
         self._gen[slot] = 0
         self._cur[slot] = 0
@@ -297,6 +328,10 @@ class ContinuousScheduler:
         rec = self.records[req.rid]
         if not rec.tokens:
             rec.first_token_step = t_done
+            obs.digests.observe(
+                f"{self.name}.ttft_steps", rec.ttft_steps,
+                lo=0.0, hi=self._digest_hi(), n_buckets=128,
+            )
         rec.tokens.append(tok)
         self._gen[slot] += 1
         self._cur[slot] = tok
@@ -357,6 +392,10 @@ class ContinuousScheduler:
             rid=req.rid, arrival=req.arrival, prompt_len=plen,
             bucket_len=bucket, admit_step=self.now,
         )
+        obs.digests.observe(
+            f"{self.name}.queue_delay_steps", self.now - req.arrival,
+            lo=0.0, hi=self._digest_hi(), n_buckets=128,
+        )
         # The prefill occupies the engine: advance the clock before the
         # first token completes.
         self.now += self.prefill_cost_steps
@@ -372,24 +411,36 @@ class ContinuousScheduler:
         path (a stray `float()`/`np.asarray` on a device value) raises
         instead of silently serializing the loop.
         """
+        t0 = time.perf_counter()
         with obs.span("serve.decode", cat="serve") as sp:
             params = self.engine.access_params(self.n_slots)
             with jax.transfer_guard_device_to_host("disallow"):
-                toks, m, self.cache = self._decode_jit(
+                toks, m, dig, self.cache = self._decode_jit(
                     params,
                     self.cache,
                     jnp.asarray(self._cur),
                     jnp.asarray(self._rid),
                     jnp.asarray(self._gen),
                     self.key,
+                    self._occ_digest,
                 )
-            # THE per-step host sync: tokens AND step metrics, one fetch.
-            toks, m = jax.device_get((toks, m))
+            # THE per-step host sync: tokens, step metrics AND the
+            # cumulative occupancy digest, one fetch.
+            toks, m, dig_h = jax.device_get((toks, m, dig))
             toks = np.asarray(toks)
+            self._occ_digest = dig
             self.host_syncs += 1
             self.decode_steps += 1
             obs.registry.inc("serve.decode_steps")
             obs.registry.fold(m, prefix="serve.")
+            if dig_h is not None:
+                # Cumulative carry -> replace, never merge (DigestRegistry.put)
+                obs.digests.put(f"{self.name}.batch_occupancy", dig_h)
+            obs.digests.observe(
+                f"{self.name}.step_latency_us",
+                (time.perf_counter() - t0) * 1e6,
+                lo=0.0, hi=1e5, n_buckets=128,
+            )
             emitted = 0
             for slot in np.flatnonzero(self._rid >= 0):
                 # a decode-emitted token completes at the END of this step
@@ -465,6 +516,11 @@ class ContinuousScheduler:
         self.tokens_generated = 0
         self.prefill_tokens = 0
         self.wall_s = 0.0
+        if self.device_metrics:
+            self._occ_digest = obs.StreamingDigest.zeros(
+                0.0, self.n_slots + 1.0, self.n_slots + 1
+            )
+        obs.digests.reset(f"{self.name}.")
         if not keep_traces:
             self.trace_counts = {"admit": 0, "decode": 0}
 
@@ -515,6 +571,17 @@ class ContinuousScheduler:
         return sorted(self.completed, key=lambda r: r.rid)
 
     # ----------------------------------------------------------- reporting
+    def digest_stats(self) -> dict[str, dict]:
+        """This scheduler's digest summaries (percentiles, no arrays)."""
+        prefix = f"{self.name}."
+        return {
+            n: d.summary()
+            for n, d in (
+                (n, obs.digests.get(n)) for n in obs.digests.names()
+            )
+            if n.startswith(prefix)
+        }
+
     def latency_stats(self) -> dict[str, float]:
         """Aggregate latency/throughput stats over completed requests."""
         lats = np.array([r.latency_steps for r in self.completed])

@@ -56,6 +56,39 @@ def test_tiny_quick_benchmark_runs():
     assert "all-passed" in r.stdout
 
 
+def test_baseline_check_key_resolution():
+    """_resolve_key resolves dotted paths longest-prefix-first so
+    literal dotted key names (e.g. "sigma0.7__logit_rmse") work, and
+    every declared baseline check targets a key the committed full
+    BENCH json actually has (a renamed key must fail here, not silently
+    SKIP in CI)."""
+    import json
+
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks.run import BASELINE_CHECKS, _resolve_key
+    finally:
+        sys.path.remove(REPO)
+
+    doc = {"a": {"b.c": {"d": 1.0}}, "x.y": 2.0, "x": {"y": 3.0}}
+    assert _resolve_key(doc, "a.b.c.d") == 1.0
+    assert _resolve_key(doc, "x.y") == 2.0  # literal dotted key wins
+    assert _resolve_key(doc, "a.nope") is None
+    assert _resolve_key(doc, "") == doc
+
+    for bench, (full_file, _, checks) in BASELINE_CHECKS.items():
+        path = os.path.join(REPO, "benchmarks", full_file)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            full = json.load(f)
+        for key, mode, _ in checks:
+            assert mode in ("eq", "min", "rel"), (bench, key, mode)
+            assert _resolve_key(full, key) is not None, (
+                f"{bench}: check key {key!r} missing from {full_file}"
+            )
+
+
 # ------------------------------------------------------------------ hygiene
 def _git_ls_files():
     try:
@@ -108,3 +141,31 @@ def test_no_bytecode_tracked_and_ignored():
         gitignore = f.read().splitlines()
     assert "__pycache__/" in gitignore
     assert "*.pyc" in gitignore
+
+
+def test_no_quick_or_trace_artifacts_tracked():
+    """Quick-mode BENCH json, trace exports, and fleet-status/dashboard
+    files are per-run artifacts: regenerated by every CI smoke, never
+    meaningful to diff.  Only the full-mode BENCH_*.json trajectories
+    are committed; everything else must stay untracked, and .gitignore
+    must carry the GLOBS (not an enumerated name list that silently
+    rots as benchmarks are added)."""
+    offenders = [
+        f for f in _git_ls_files()
+        if f.startswith("benchmarks/")
+        and (
+            f.endswith("_quick.json")
+            or os.path.basename(f).startswith("TRACE_")
+            or os.path.basename(f).startswith("fleet_status")
+            or f.endswith(".html")
+        )
+    ]
+    assert offenders == [], offenders
+    with open(os.path.join(REPO, ".gitignore")) as f:
+        gitignore = f.read().splitlines()
+    for glob in (
+        "benchmarks/*_quick.json",
+        "benchmarks/TRACE_*.json",
+        "benchmarks/fleet_status*.json",
+    ):
+        assert glob in gitignore, f"missing {glob!r} in .gitignore"

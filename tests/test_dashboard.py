@@ -1,0 +1,134 @@
+"""Report + dashboard rendering contracts (DESIGN.md Sec. 16).
+
+The dashboard layer only reads exported files, so these tests build a
+real trace through the live obs APIs (spans, digest/health emits, an
+SLO breach), export it, and assert the file-readers reconstruct the
+right rows — including the empty-digest corner, where every percentile
+renders as "-" instead of crashing or inventing a number.
+"""
+
+import json
+
+import pytest
+
+from repro import obs
+from repro.obs import dashboard, report
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs.reset_all()
+    yield
+    obs.reset_all()
+
+
+def _export_trace(tmp_path, with_breach=True):
+    """Build a representative trace via the live obs APIs and export."""
+    with obs.span("serve.generate", tokens=8):
+        pass
+    obs.digests.observe(
+        "rep0.latency_steps", [4.0, 6.0, 6.0, 9.0], lo=0.0, hi=16.0,
+        n_buckets=16,
+    )
+    obs.digests.ensure("rep0.empty", 0.0, 1.0, 8)  # never observed
+    obs.health_registry.fold_tiles("deploy.gave_up_cells", [3, 7], [2.0, 5.0])
+    obs.health_registry.set_gauge("fleet.give_up_rate", 2.5e-3)
+    if with_breach:
+        policy = obs.SLOPolicy(
+            rules=(
+                obs.SLORule(
+                    "give_up_rate", "health.gauges.fleet.give_up_rate", 1e-3
+                ),
+            )
+        )
+        policy.evaluate(obs.fleet_status(), window=3)
+    obs.digests.emit()
+    obs.health_registry.emit()
+    path = tmp_path / "TRACE_test.json"
+    obs.trace.export(path)
+    return str(path)
+
+
+def test_report_digest_and_slo_rows(tmp_path):
+    path = _export_trace(tmp_path)
+    doc = report.load(path)
+
+    rows = {r["digest"]: r for r in report.digest_rows(doc)}
+    assert rows["rep0.latency_steps"]["count"] == 4.0
+    assert rows["rep0.latency_steps"]["p50"] is not None
+    # empty digest appears with every percentile None, not dropped
+    assert rows["rep0.empty"]["count"] == 0.0
+    assert rows["rep0.empty"]["p99"] is None
+    rendered = report.render_digests(report.digest_rows(doc))
+    empty_line = next(
+        ln for ln in rendered.splitlines() if "rep0.empty" in ln
+    )
+    assert "-" in empty_line  # None percentiles render as "-"
+
+    (slo,) = report.slo_rows(doc)
+    assert slo["rule"] == "give_up_rate"
+    assert slo["breaches"] == 1
+    assert slo["last_value"] == pytest.approx(2.5e-3)
+
+
+def test_report_main_prints_new_sections(tmp_path, capsys):
+    path = _export_trace(tmp_path)
+    assert report.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "# digests" in out and "rep0.latency_steps" in out
+    assert "# slo breaches" in out and "give_up_rate" in out
+
+
+def test_dashboard_collect_and_renders(tmp_path):
+    path = _export_trace(tmp_path)
+    fleet_path = tmp_path / "fleet_status.json"
+    fleet_path.write_text(json.dumps(obs.fleet_status()))
+
+    model = dashboard.collect([path], str(fleet_path))
+    (rep,) = model["replicas"]
+    assert rep["n_events"] > 0 and rep["phases"]
+    assert {r["digest"] for r in rep["digests"]} == {
+        "rep0.latency_steps", "rep0.empty",
+    }
+    kinds = {r["metric"]: r for r in rep["health"]}
+    assert kinds["deploy.gave_up_cells"]["kind"] == "tiles"
+    assert kinds["deploy.gave_up_cells"]["total"] == 7.0
+    assert kinds["fleet.give_up_rate"]["kind"] == "gauge"
+    assert model["fleet"]["health"]["gauges"]["fleet.give_up_rate"] > 0
+
+    text = dashboard.render_text(model)
+    for needle in ("# digests", "# health", "# slo breaches",
+                   "## fleet status"):
+        assert needle in text
+
+    html = dashboard.render_html(model)
+    assert html.startswith("<!doctype html>")
+    assert "1 SLO breach instant(s)" in html
+    assert 'class="breach"' in html  # breached rule row is highlighted
+    assert "rep0.latency_steps" in html
+
+
+def test_dashboard_main_writes_html(tmp_path, capsys):
+    path = _export_trace(tmp_path, with_breach=False)
+    out = tmp_path / "fleet.html"
+    assert dashboard.main([path, "--out", str(out)]) == 0
+    assert out.exists() and out.read_text().startswith("<!doctype html>")
+    assert "0 SLO breach instant(s)" in out.read_text()
+    assert str(out) in capsys.readouterr().out
+
+
+def test_dashboard_main_fails_loudly(tmp_path, capsys):
+    # malformed trace json
+    bad = tmp_path / "TRACE_bad.json"
+    bad.write_text("{not json")
+    assert dashboard.main([str(bad)]) == 1
+    # structurally valid but zero events
+    empty = tmp_path / "TRACE_empty.json"
+    empty.write_text(json.dumps({"traceEvents": []}))
+    assert dashboard.main([str(empty)]) == 1
+    # malformed fleet status
+    good = _export_trace(tmp_path)
+    badfleet = tmp_path / "fleet_bad.json"
+    badfleet.write_text("[1, 2]")
+    assert dashboard.main([good, "--fleet", str(badfleet)]) == 1
+    assert "error" in capsys.readouterr().err

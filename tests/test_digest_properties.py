@@ -1,0 +1,124 @@
+"""Property-based contracts for obs.digest (DESIGN.md Sec. 16).
+
+Two guarantees the fleet observability layer leans on:
+
+* QUANTILE ACCURACY — for ANY in-range input distribution, the
+  rank-based bucket-midpoint quantile is within one bucket width of
+  the exact order statistic (np.quantile with method="lower", the same
+  rank convention).  This is what makes fixed-bucket histograms a safe
+  replacement for per-request latency arrays.
+* MERGE ALGEBRA — merge is commutative and associative (elementwise
+  float32 count addition), so per-replica digests fold into fleet
+  digests in any order with identical results.
+
+Pure numpy paths (`host` + `observe`): no jax required here; the
+traced `add` path is covered by test_obs.py equivalence tests.
+"""
+
+import numpy as np
+
+from repro.obs.digest import StreamingDigest
+
+from hypothesis_compat import given, settings, st
+
+_VALUES = st.lists(
+    st.floats(
+        min_value=-1e6, max_value=1e6,
+        allow_nan=False, allow_infinity=False, width=32,
+    ),
+    min_size=1, max_size=200,
+)
+
+
+def _digest_for(values: np.ndarray, n_buckets: int) -> StreamingDigest:
+    lo = float(values.min())
+    hi = float(values.max())
+    if hi <= lo:  # degenerate range: give the single bucket some width
+        hi = lo + max(abs(lo) * 1e-6, 1e-6)
+    d = StreamingDigest.host(lo, hi, n_buckets)
+    d.observe(values)
+    return d
+
+
+@settings(max_examples=200, deadline=None)
+@given(values=_VALUES, n_buckets=st.integers(1, 64), q=st.floats(0.0, 1.0))
+def test_quantile_within_one_bucket_width(values, n_buckets, q):
+    """digest.quantile(q) is within one bucket width of the exact
+    rank-based order statistic, for arbitrary distributions."""
+    x = np.asarray(values, np.float32)
+    d = _digest_for(x, n_buckets)
+    est = d.quantile(q)
+    assert est is not None
+    exact = float(np.quantile(x, q, method="lower"))
+    assert abs(est - exact) <= d.width + 1e-6 * max(abs(exact), 1.0), (
+        est, exact, d.width,
+    )
+
+
+@settings(max_examples=100, deadline=None)
+@given(chunks=st.lists(_VALUES, min_size=2, max_size=5), seed=st.integers(0, 2**31 - 1))
+def test_merge_commutative_and_associative(chunks, seed):
+    """Folding per-replica digests in ANY order gives identical counts,
+    totals and extrema — the fleet-fold contract."""
+    flat = np.asarray([v for c in chunks for v in c], np.float32)
+    lo, hi = float(flat.min()), float(flat.max())
+    if hi <= lo:
+        hi = lo + max(abs(lo) * 1e-6, 1e-6)
+    parts = []
+    for c in chunks:
+        d = StreamingDigest.host(lo, hi, 16)
+        d.observe(np.asarray(c, np.float32))
+        parts.append(d)
+
+    def fold(ds):
+        acc = ds[0]
+        for d in ds[1:]:
+            acc = acc.merge(d)
+        return acc
+
+    rng = np.random.default_rng(seed)
+    forward = fold(parts)
+    shuffled = fold([parts[i] for i in rng.permutation(len(parts))])
+    # associativity: right fold == left fold
+    acc = parts[-1]
+    for d in reversed(parts[:-1]):
+        acc = d.merge(acc)
+    for other in (shuffled, acc):
+        # counts (small float32 integers) and extrema are EXACT under
+        # reordering — quantiles depend only on these; the running sum
+        # reorders float additions, so it is close, not bit-equal.
+        np.testing.assert_array_equal(
+            np.asarray(forward.counts), np.asarray(other.counts)
+        )
+        np.testing.assert_allclose(
+            float(forward.total), float(other.total), rtol=1e-4, atol=1e-3
+        )
+        assert float(forward.vmin) == float(other.vmin)
+        assert float(forward.vmax) == float(other.vmax)
+    # the fold saw every observation exactly once
+    assert forward.count == len(flat)
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=_VALUES, b=_VALUES)
+def test_pairwise_merge_commutes(a, b):
+    """merge(a, b) == merge(b, a) exactly."""
+    flat = np.asarray(list(a) + list(b), np.float32)
+    lo, hi = float(flat.min()), float(flat.max())
+    if hi <= lo:
+        hi = lo + max(abs(lo) * 1e-6, 1e-6)
+    da = StreamingDigest.host(lo, hi, 32)
+    da.observe(np.asarray(a, np.float32))
+    db = StreamingDigest.host(lo, hi, 32)
+    db.observe(np.asarray(b, np.float32))
+    ab, ba = da.merge(db), db.merge(da)
+    np.testing.assert_array_equal(np.asarray(ab.counts), np.asarray(ba.counts))
+    assert float(ab.total) == float(ba.total)
+    assert (float(ab.vmin), float(ab.vmax)) == (float(ba.vmin), float(ba.vmax))
+
+
+def test_empty_digest_quantiles_none():
+    d = StreamingDigest.host(0.0, 1.0, 8)
+    assert d.quantile(0.5) is None
+    s = d.summary()
+    assert s["count"] == 0 and s["p99"] is None and s["mean"] is None

@@ -1,0 +1,172 @@
+"""Fleet health & SLO contracts (DESIGN.md Sec. 16).
+
+Tier-1 versions of what benchmarks/fleet_health.py asserts at scale:
+
+* per-tile health maps reduce device-side and ride the deploy's single
+  host sync (no extra fetch for the maps or the deploy digests);
+* the lifetime scrub populates drift/give-up health state and the
+  refresh-debt gauge on its existing epoch sync;
+* declarative SLO rules resolve dotted metric paths (including literal
+  dotted key names), treat missing metrics as non-breaching, and fire
+  exactly when injected degradation crosses the ceiling — a sick chip's
+  stuck-cell population surfaces give-ups only when ITS scrub runs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import WVConfig, WVMethod, pipeline
+from repro.core.programmer import deploy_arrays
+from repro.core.types import FaultConfig
+from repro.lifetime import LifetimeSimulator
+from repro.lifetime.refresh import RefreshConfig, RefreshPolicy
+from repro.obs import metrics
+from repro.obs.health import resolve_metric
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs.reset_all()
+    yield
+    obs.reset_all()
+
+
+def _tiny_params():
+    k = jax.random.split(jax.random.PRNGKey(0), 2)
+    return {
+        "wa": jax.random.normal(k[0], (32, 48)) * 0.02,
+        "wb": jax.random.normal(k[1], (48, 32)) * 0.02,
+        "norm": jnp.ones((32,)),
+    }
+
+
+_WV = WVConfig(method=WVMethod.HARP, give_up_pulses=80)
+
+
+# ------------------------------------------------------------- SLO rules
+def test_slo_rule_resolution_and_missing_metric():
+    status = {
+        "digests": {"rep0.latency_steps": {"p99": 40.0, "count": 7.0}},
+        "health": {"gauges": {"fleet.give_up_rate": 2e-3}},
+        "counters": {"lifetime.gave_up_cells": 12.0},
+    }
+    # dotted digest name + summary field resolve longest-prefix-first
+    assert resolve_metric(status, "digests.rep0.latency_steps.p99") == 40.0
+    assert resolve_metric(status, "health.gauges.fleet.give_up_rate") == 2e-3
+    assert resolve_metric(status, "digests.rep9.latency_steps.p99") is None
+
+    hit = obs.SLORule("p99", "digests.rep0.latency_steps.p99", 30.0)
+    ok = obs.SLORule("p99_ok", "digests.rep0.latency_steps.p99", 50.0)
+    missing = obs.SLORule("gone", "digests.rep9.latency_steps.p99", 1.0)
+    assert hit.evaluate(status)["breached"] is True
+    assert ok.evaluate(status)["breached"] is False
+    res = missing.evaluate(status)
+    assert res["value"] is None and res["breached"] is False
+
+
+def test_slo_policy_counters_and_trace_gating():
+    status = {"digests": {}, "health": {"gauges": {"g": 3.0}}, "counters": {}}
+    policy = obs.SLOPolicy(rules=(obs.SLORule("g_high", "health.gauges.g", 1.0),))
+    policy.evaluate(status, window=0)
+    with obs.disabled():
+        policy.evaluate(status, window=1)
+    # counters are contract-bearing: they count even while disabled
+    assert metrics.value("slo.breaches.g_high") == 2.0
+    assert metrics.value("slo.evaluations") == 2.0
+    # trace instants are presentation: only the enabled evaluation emits
+    slo_events = [
+        e for e in obs.trace.events() if e.get("cat") == "slo"
+    ]
+    assert len(slo_events) == 1
+    assert slo_events[0]["args"]["window"] == 0
+    assert slo_events[0]["args"]["value"] == 3.0
+
+
+def test_fleet_status_joins_namespaces():
+    obs.digests.observe("d", 2.0, lo=0.0, hi=4.0, n_buckets=4)
+    obs.health_registry.set_gauge("g", 1.0)
+    metrics.registry.inc("c", 5.0)
+    status = obs.fleet_status(extra={"fleet": {"inject_window": 2}})
+    assert status["digests"]["d"]["count"] == 1.0
+    assert status["health"]["gauges"]["g"] == 1.0
+    assert status["counters"]["c"] == 5.0
+    assert status["fleet"]["inject_window"] == 2
+
+
+# ---------------------------------------------------- deploy health maps
+def test_deploy_health_rides_single_sync():
+    """Tile health maps + deploy digests populate on the batched
+    deploy's ONE host sync — faulty silicon shows up as per-tile
+    give-up mass without any extra fetch."""
+    fc = FaultConfig(p_stuck_hrs=0.05, columns_per_tile=16, tiles_per_chip=4)
+    pipeline.reset_counters()
+    deploy_arrays(jax.random.PRNGKey(3), _tiny_params(), _WV, fault_cfg=fc)
+    assert pipeline.host_sync_count() == 1
+    tiles = obs.health_registry.tiles("deploy.gave_up_cells")
+    assert tiles and sum(tiles.values()) > 0
+    assert obs.health_registry.tiles("deploy.write_pulses")
+    for name in ("deploy.write_pulses_per_column",
+                 "deploy.iterations_per_column"):
+        d = obs.digests.get(name)
+        assert d is not None and d.count > 0
+
+
+# ------------------------------------- injected degradation -> SLO epoch
+def test_give_up_slo_fires_only_when_sick_scrub_runs():
+    """Two chips, one sick (stuck cells), staggered scrubs: the
+    give-up-rate rule stays green while only the healthy chip scrubs
+    and breaches exactly when the sick chip's deferred scrub surfaces
+    its bad silicon."""
+    params = _tiny_params()
+    dep_h, _ = deploy_arrays(jax.random.PRNGKey(1), params, _WV)
+    fc = FaultConfig(p_stuck_hrs=0.05, columns_per_tile=16, tiles_per_chip=4)
+    dep_s, rep_s = deploy_arrays(
+        jax.random.PRNGKey(2), params, _WV, fault_cfg=fc
+    )
+    assert rep_s.total_gave_up_cells > 0  # the bad silicon is real
+    n_cells = sum(
+        int(np.prod(a.g.shape))
+        for d in (dep_h, dep_s)
+        for a in d.arrays.values()
+    )
+    sim_h = LifetimeSimulator(
+        jax.random.PRNGKey(4), dep_h,
+        refresh_cfg=RefreshConfig(policy=RefreshPolicy.VERIFY_TRIGGERED),
+        columns_per_tile=16,
+    )
+    sim_s = LifetimeSimulator(
+        jax.random.PRNGKey(5), dep_s,
+        refresh_cfg=RefreshConfig(policy=RefreshPolicy.VERIFY_TRIGGERED),
+        columns_per_tile=16,
+    )
+    policy = obs.SLOPolicy(
+        rules=(
+            obs.SLORule(
+                "give_up_rate", "health.gauges.fleet.give_up_rate", 3e-4
+            ),
+        )
+    )
+
+    def window(sims):
+        for sim in sims:
+            sim.step_epoch(10.0)
+        gave_up = metrics.snapshot().get("lifetime.gave_up_cells", 0.0)
+        obs.health_registry.set_gauge("fleet.give_up_rate", gave_up / n_cells)
+        (res,) = policy.evaluate(obs.fleet_status())
+        return res
+
+    # windows 0-1: only the healthy chip scrubs -> green
+    assert window([sim_h])["breached"] is False
+    assert window([sim_h])["breached"] is False
+    # window 2: the sick chip's deferred scrub runs -> breach
+    res = window([sim_h, sim_s])
+    assert res["breached"] is True, res
+    # the scrub also populated drift health + the refresh-debt gauge
+    assert obs.health_registry.tiles("lifetime.drift_rms_lsb")
+    gauges = obs.health_registry.snapshot()["gauges"]
+    assert "lifetime.refresh_debt_epochs" in gauges
+    d = obs.digests.get("lifetime.drift_lsb")
+    assert d is not None and d.count > 0
