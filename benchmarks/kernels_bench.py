@@ -1,4 +1,6 @@
-"""Kernel micro-benchmarks: FWHT / fused WV step / ACiM VMM vs oracles.
+"""Kernel micro-benchmarks: FWHT / fused WV step / ACiM VMM vs oracles,
+plus the fused single-dispatch `cim_matmul` vs the pre-fusion per-tile
+loop (DESIGN.md Sec. 17) swept over (n_tiles, DAC planes, batch).
 
 On CPU these time the *reference* path and validate the Pallas kernels
 in interpret mode (numbers are not TPU-representative; the roofline for
@@ -11,15 +13,75 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cim.mvm import cim_vmm
+from repro.cim import CIMConfig, planes_per_token
+from repro.cim.mvm import cim_matmul, cim_vmm
+from repro.cim.tile import build_weight
+from repro.core.programmer import ArrayState
 from repro.kernels.fwht import ops as fwht_ops, ref as fwht_ref
 from repro.kernels.wv_step import ops as wv_ops, ref as wv_ref
 from repro.kernels.wv_step.ref import WVCellParams
+from repro.quant import pack_columns
 
-from .common import emit, timed
+from .common import emit, export_trace, timed
 
 
-def main() -> None:
+def _looped_cim_matmul(x, w):
+    """The pre-fusion `cim_matmul` datapath: Python-listed DAC planes,
+    per-(tile, plane) noise draws concatenated per tile, and one
+    `cim_vmm` dispatch per tile, eagerly accumulated.  Kept as the
+    "looped" comparator for the fused single-dispatch forward; the
+    microbench asserts bit-identity (noisy AND zero-noise) every run."""
+    from repro.core import rng
+    from repro.readout import noise as ro_noise
+
+    cfg = w.cfg
+    lead, k = x.shape[:-1], x.shape[-1]
+    xf = x.reshape(-1, k).astype(jnp.float32)
+    t = xf.shape[0]
+    n_mag = cfg.dac_bits - 1
+    q_max = float((1 << n_mag) - 1)
+    s_tok = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / q_max
+    s_tok = jnp.maximum(s_tok, 1e-12)
+    q = jnp.clip(jnp.round(xf / s_tok), -q_max, q_max).astype(jnp.int32)
+    pos, neg = jnp.maximum(q, 0), jnp.maximum(-q, 0)
+    planes, weights = [], []
+    for sign, mag in ((1.0, pos), (-1.0, neg)):
+        for b in range(n_mag):
+            planes.append(((mag >> b) & 1).astype(jnp.float32))
+            weights.append(sign * float(1 << b) * s_tok[:, 0])
+    planes, weights = jnp.stack(planes), jnp.stack(weights)
+    p = planes.shape[0]
+    n_tiles, s, r, m = w.g_pos.shape
+    pad = n_tiles * r - k
+    if pad:
+        planes = jnp.pad(planes, ((0, 0), (0, 0), (0, pad)))
+    xp = planes.reshape(p * t, n_tiles * r)
+    full_scale = cfg.full_scale_frac * 2.0 * r * float(w.levels - 1)
+    acc = jnp.zeros((p * t, m), jnp.float32)
+    for ti in range(n_tiles):
+        noise = None
+        if cfg.sigma_read_lsb > 0.0:
+            k_tile = rng.fold_in(w.key, ti)
+            noise = jnp.concatenate(
+                [
+                    ro_noise.sample_token_read_noise(
+                        rng.fold_in(k_tile, pi), t, s, m, cfg.sigma_read_lsb
+                    )
+                    for pi in range(p)
+                ],
+                axis=1,
+            )
+        acc = acc + cim_vmm(
+            xp[:, ti * r : (ti + 1) * r], w.g_pos[ti], w.g_neg[ti],
+            bc=w.bc, adc_bits=cfg.adc_bits, full_scale=full_scale,
+            noise=noise,
+        )
+    y = jnp.einsum("pt,ptm->tm", weights, acc.reshape(p, t, m))
+    y = y * w.scale[None, :]
+    return y.reshape(*lead, m).astype(x.dtype)
+
+
+def main(quick: bool = False) -> None:
     x = jax.random.normal(jax.random.PRNGKey(0), (4096, 32))
     ref_fn = jax.jit(fwht_ref.fwht)
     out_ref, us_ref = timed(ref_fn, x, name="kernels.fwht_ref")
@@ -74,6 +136,58 @@ def main() -> None:
     emit("kernels.cim_vmm_ref", us, f"B=128 K=32 M=256 kernel_maxerr={err:.1e}")
     assert err == 0.0, err
 
+    # ---- fused single-dispatch cim_matmul vs the pre-fusion loop ----
+    # ISSUE 9 tentpole: the whole bit-serial analog forward (DAC plane
+    # streaming -> batched noise lattice -> tiled VMM scan -> slice
+    # recombination) as ONE dispatch, swept over (n_tiles, DAC planes,
+    # batch).  Zero-noise so the comparison is pure datapath; fused
+    # bit-identity to the looped pre-PR path is asserted inline.
+    macro_rows, m_out, bc, slices = 32, 64, 3, 2
+    sweep = [(2, 4, 8)] if quick else [(1, 4, 8), (4, 4, 8), (4, 6, 8), (4, 4, 64)]
+    for n_tiles, dac_bits, batch in sweep:
+        k_in = n_tiles * macro_rows
+        q_max = (1 << (bc * slices)) - 1
+        q = jax.random.randint(
+            jax.random.PRNGKey(6), (k_in, m_out), -q_max, q_max + 1
+        )
+        cols, layout = pack_columns(q, macro_rows, bc, slices)
+        state = ArrayState(
+            g=cols, targets=cols, d2d=jnp.ones_like(cols),
+            scale=0.01 * (1.0 + jnp.arange(m_out, dtype=jnp.float32))[None, :],
+            layout=layout, shape=(k_in, m_out), dtype=jnp.float32,
+        )
+        ccfg = CIMConfig(
+            macro_rows=macro_rows, dac_bits=dac_bits, adc_bits=9,
+            sigma_read_lsb=0.3,
+        )
+        w = build_weight(state, ccfg, jax.random.PRNGKey(7), name="bench")
+        w0 = build_weight(
+            state, ccfg.replace(sigma_read_lsb=0.0),
+            jax.random.PRNGKey(7), name="bench",
+        )
+        x = jax.random.normal(jax.random.PRNGKey(8), (batch, k_in), jnp.float32)
+        tag = f"t{n_tiles}_p{planes_per_token(ccfg)}_b{batch}"
+        out_f, us_f = timed(
+            jax.jit(lambda x_, w_=w: cim_matmul(x_, w_)), x,
+            name=f"kernels.cim_matmul_fused.{tag}",
+        )
+        out_l, us_l = timed(
+            jax.jit(lambda x_, w_=w: _looped_cim_matmul(x_, w_)), x,
+            name=f"kernels.cim_matmul_looped.{tag}",
+        )
+        assert bool(jnp.all(out_f == out_l)), f"fused != looped (noisy) {tag}"
+        out_f0 = cim_matmul(x, w0)
+        out_l0 = _looped_cim_matmul(x, w0)
+        assert bool(jnp.all(out_f0 == out_l0)), f"fused != looped (clean) {tag}"
+        emit(
+            f"kernels.cim_matmul_fused.{tag}", us_f,
+            f"looped_us={us_l:.1f} speedup={us_l / max(us_f, 1e-9):.2f}x "
+            f"bit_identical=1",
+        )
+    export_trace("kernels", quick)
+
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(quick="--quick" in sys.argv)

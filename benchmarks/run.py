@@ -42,6 +42,7 @@ REGISTRY: list[tuple[str, str, str, dict]] = [
 
 # Benchmarks whose entry accepts quick=True (CI smoke mode).
 QUICK_CAPABLE = {
+    "kernels.bench",
     "deploy.throughput",
     "cim.inference",
     "readout.sweep",
@@ -90,6 +91,12 @@ BASELINE_CHECKS: dict[str, tuple[str, str, list[tuple[str, str, float]]]] = {
         ("analog.counters.host_syncs_per_step", "eq", 0.0),
         ("analog.counters.retraces_after_warmup", "eq", 0.0),
         ("config.rms_cell_error_lsb", "rel", 0.15),
+        # Fused analog decode throughput gate (DESIGN.md Sec. 17): the
+        # pre-fusion interpreter loop cost 25-90x more per decode step,
+        # so even these generous runner-jitter tolerances fail loudly
+        # if per-tile/per-plane Python dispatch ever creeps back.
+        ("analog.summary.step_us", "rel", 2.0),
+        ("analog.summary.tokens_per_s", "rel", 0.9),
     ]),
     "fault.tolerance": ("BENCH_faults.json", "BENCH_faults_quick.json", [
         ("contracts.host_syncs_per_deploy", "eq", 0.0),

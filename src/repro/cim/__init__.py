@@ -3,5 +3,12 @@
 # ArrayState conductances, the noisy bit-serial DAC -> VMM -> ADC
 # forward, and the executor that swaps it into the serving engine.
 from .tile import CIMWeight, build_weight, slice_planes, tile_planes  # noqa: F401
-from .mvm import CIMConfig, cim_matmul, cim_vmm, planes_per_token  # noqa: F401
+from .mvm import (  # noqa: F401
+    CIMConfig,
+    cim_matmul,
+    cim_vmm,
+    current_token_ids,
+    planes_per_token,
+    token_stream_ids,
+)
 from .executor import CIMExecutor, analog_eligible  # noqa: F401

@@ -34,8 +34,10 @@ from repro import obs
 from repro.core.cost import inference_token_cost
 from repro.core.programmer import DeployedModel
 
+import dataclasses
+
 from .mvm import CIMConfig, cim_matmul, planes_per_token
-from .tile import CIMWeight, build_weight, rekey
+from .tile import CIMWeight, broadcast_key, build_weight
 
 __all__ = ["CIMExecutor", "analog_eligible"]
 
@@ -68,8 +70,9 @@ class CIMExecutor:
       deployed: `deploy_arrays` output (owns the live conductances).
       cfg: analog inference configuration.
       key: master read-noise key; every engine access folds a fresh
-        sub-stream (`fold_in(key, access)`), every leaf folds its uid,
-        every stacked layer its index (tile.rekey).
+        sub-stream (`fold_in(key, access)`) swapped into the leaves'
+        key child; each leaf's uid and each stacked layer's index fold
+        in-jit from the `CIMWeight.uid` / `layer_id` fields.
       predicate: overrides `analog_eligible`.
       mesh: optional device mesh; tile planes shard their output-channel
         axis over "model" (`launch.shardings.cim_weight_specs`) so the
@@ -108,12 +111,22 @@ class CIMExecutor:
             self._g_seen[name] = state.g
 
     # ----------------------------------------------------------- tiling
-    def _leaf_key(self, name: str) -> jax.Array:
-        k = jax.random.fold_in(self.key, self.access)
-        return jax.random.fold_in(k, self._uids[name])
+    def _access_key(self) -> jax.Array:
+        """fold_in(master, access): ONE eager fold shared by every leaf.
+
+        The per-leaf uid and per-layer sub-streams fold IN-JIT from the
+        `CIMWeight.uid` / `layer_id` fields, so the stream chain
+        master -> access -> uid -> layer -> tile -> plane -> token_id is
+        unchanged while the host-side per-access work collapses from a
+        per-leaf vmap fan-out to this single fold plus key broadcasts.
+        """
+        return jax.random.fold_in(self.key, self.access)
 
     def _tile(self, name: str, state) -> CIMWeight:
-        w = build_weight(state, self.cfg, self._leaf_key(name), name=name)
+        w = build_weight(
+            state, self.cfg, self._access_key(), name=name,
+            uid=self._uids[name],
+        )
         if self.mesh is not None:
             # Lazy import: launch sits above cim in the layering; the
             # executor only touches it when a mesh is actually supplied.
@@ -135,17 +148,32 @@ class CIMExecutor:
 
     # ---------------------------------------------------------- serving
     def params(self) -> Any:
-        """Current served pytree: CIMWeight analog leaves + digital rest."""
+        """Current served pytree: CIMWeight analog leaves + digital rest.
+
+        Per-access rekey is one `fold_in` plus at most one broadcast per
+        distinct layer-stack size — the leaves' uid/layer sub-streams
+        fold inside the jitted forward, so refreshing noise streams for
+        a whole model costs a couple of tiny dispatches, not a per-leaf
+        vmap fan-out.
+        """
         self._refresh_views()
         leaves = list(self.deployed.leaves)
         rekey_live = self.cfg.sigma_read_lsb > 0.0  # keys unread when clean
+        if rekey_live:
+            ak = self._access_key()
+            bcast: dict[int | None, jax.Array] = {}
         for name in self.deployed.arrays:
             slot = self.deployed.slots[name]
             if name in self._analog:
                 w = self._analog[name]
-                leaves[slot] = (
-                    rekey(w, self._leaf_key(name)) if rekey_live else w
-                )
+                if rekey_live:
+                    n_layers = (
+                        w.g_pos.shape[0] if w.g_pos.ndim == 5 else None
+                    )
+                    if n_layers not in bcast:
+                        bcast[n_layers] = broadcast_key(ak, n_layers)
+                    w = dataclasses.replace(w, key=bcast[n_layers])
+                leaves[slot] = w
             else:
                 leaves[slot] = self._digital[name]
         return jax.tree_util.tree_unflatten(self.deployed.treedef, leaves)

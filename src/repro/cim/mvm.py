@@ -8,31 +8,38 @@ end in cell-LSB units:
    one plane per magnitude bit and polarity (positive and negative
    magnitudes drive separate phases; their ADC results subtract
    digitally).  ``dac_bits=None`` models an ideal analog driver: the
-   raw activation drives the rows in a single plane.
-2. **Analog column sums + per-slice ADC.**  Every plane multiplies into
-   each tile's signed conductance pair per slice; per-read TIA/ADC
-   thermal noise lands on the analog partial sum; the shared `cim_vmm`
-   entry (`kernels/acim_vmm`, `use_pallas`-gated with a bit-identical
-   unfused reference) applies the fused clamp+quantize ADC epilogue and
-   the 2^(Bc*l) shift-and-add slice recombination.
+   raw activation drives the rows in a single plane.  The plane stack
+   is built as one vectorized bit-extraction (no Python list append).
+2. **Analog column sums + per-slice ADC, every tile at once.**  All
+   planes multiply into EVERY macro tile's signed conductance pair in a
+   single fused dispatch (`kernels/acim_vmm.acim_vmm_tiled`,
+   `use_pallas`-gated with a bit-identical scanned reference): per-read
+   TIA/ADC thermal noise lands on the analog partial sums, the fused
+   clamp+quantize ADC epilogue and 2^(Bc*l) slice recombination run per
+   tile, and tiles sum over the row partition — all inside the one
+   kernel.  Noise for the whole (tile, plane, token) lattice is drawn
+   by ONE batched `sample_token_read_noise` call.
 3. **Digital recombination.**  Plane outputs recombine with their
-   bit weights and the per-token DAC scale, tiles sum over the row
-   partition, and the per-output-channel quantization scale dequantizes
-   to model units.
+   bit weights and the per-token DAC scale, and the per-output-channel
+   quantization scale dequantizes to model units.
 
-Read-noise RNG policy (DESIGN.md Sec. 11): every read draws from
+Read-noise RNG policy (DESIGN.md Sec. 17): every read draws from
 
-    fold_in(leaf_key, tile) -> fold_in(., plane) -> fold_in(., token)
+    leaf key -> [uid] -> [layer] -> tile -> plane -> token_id
 
-where `leaf_key` is the executor's per-access key (re-folded every
-engine step) and `token` is the flattened batch index of the call.  A
-token's noise therefore depends only on (access key, tile, plane,
-token index) — NOT on how many other tokens share the batch — so a
-batched forward is bit-reproducible across batch shapes.  The sampler
-itself (`readout.noise.sample_token_read_noise`) and the per-slice ADC
+where the leaf `key` child is the executor's per-access key (swapped
+every engine step), `uid`/`layer_id` ride the `CIMWeight` itself and
+fold IN-JIT (so the executor's per-access rekey is one fold + a
+broadcast, not a per-leaf vmap), and `token_id` defaults to the
+flattened batch index but is overridden with the REQUEST id by the
+serving scheduler (`token_stream_ids`).  A token's noise therefore
+depends only on (access key, uid, layer, tile, plane, token id) — NOT
+on which slot it occupies or how many other tokens share the batch —
+so the analog forward is batch-composition-invariant.  The sampler
+(`readout.noise.sample_token_read_noise`) and the per-slice ADC
 quantizer (`readout.converter.sar_quantize`, reached through the
-`cim_vmm` epilogue) are the SAME models the WV verify path reads
-through — one readout subsystem, DESIGN.md Sec. 12.
+kernel epilogue) are the SAME models the WV verify path reads through
+— one readout subsystem, DESIGN.md Sec. 12.
 
 In the ideal limit (``dac_bits=None``, ``adc_bits=None``,
 ``sigma_read_lsb=0``) the whole pipeline collapses algebraically to
@@ -42,6 +49,7 @@ In the ideal limit (``dac_bits=None``, ``adc_bits=None``,
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
@@ -53,7 +61,14 @@ from repro.readout import noise as ro_noise
 
 from .tile import CIMWeight
 
-__all__ = ["CIMConfig", "cim_vmm", "cim_matmul", "planes_per_token"]
+__all__ = [
+    "CIMConfig",
+    "cim_vmm",
+    "cim_matmul",
+    "planes_per_token",
+    "token_stream_ids",
+    "current_token_ids",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,9 +89,12 @@ class CIMConfig:
     def __post_init__(self):
         # dac_bits counts sign + magnitude: >= 2 leaves >= 1 magnitude
         # bit; 1 would stream zero planes.
-        assert self.dac_bits is None or self.dac_bits >= 2, self.dac_bits
-        assert self.adc_bits is None or self.adc_bits >= 1, self.adc_bits
-        assert self.macro_rows >= 1, self.macro_rows
+        if self.dac_bits is not None and self.dac_bits < 2:
+            raise ValueError(f"dac_bits must be >= 2 or None: {self.dac_bits}")
+        if self.adc_bits is not None and self.adc_bits < 1:
+            raise ValueError(f"adc_bits must be >= 1 or None: {self.adc_bits}")
+        if self.macro_rows < 1:
+            raise ValueError(f"macro_rows must be >= 1: {self.macro_rows}")
 
     def replace(self, **kw) -> "CIMConfig":
         return dataclasses.replace(self, **kw)
@@ -87,6 +105,31 @@ def planes_per_token(cfg: CIMConfig) -> int:
     if cfg.dac_bits is None:
         return 1
     return 2 * (cfg.dac_bits - 1)  # magnitude bits x {pos, neg} phases
+
+
+# --------------------------------------------------------------- token ids
+# Ambient per-row token-id stream for the CIM noise sub-streams.  The
+# serving scheduler wraps its jitted decode body in `token_stream_ids(
+# rids)` so every analog leaf folds the REQUEST id (a traced argument of
+# the compiled step — no retrace) instead of the flattened batch slot.
+# Entered at trace time; the captured array is a tracer of the enclosing
+# jit, which is exactly what makes the compiled step slot-invariant.
+_TOKEN_IDS: list = []
+
+
+@contextlib.contextmanager
+def token_stream_ids(ids: jax.Array):
+    """Route `ids` ((T,) int32) into every `cim_matmul` in the block."""
+    _TOKEN_IDS.append(ids)
+    try:
+        yield
+    finally:
+        _TOKEN_IDS.pop()
+
+
+def current_token_ids() -> jax.Array | None:
+    """The ambient token-id stream, or None (= flattened batch index)."""
+    return _TOKEN_IDS[-1] if _TOKEN_IDS else None
 
 
 def cim_vmm(
@@ -119,7 +162,9 @@ def _dac_stream(xf: jax.Array, cfg: CIMConfig) -> tuple[jax.Array, jax.Array]:
     Ideal driver: one plane, unit weight.  Bit-serial: per-token absmax
     scaling to a signed `dac_bits` code, positive and negative magnitudes
     split into binary planes LSB-first; plane p recombines with weight
-    +-2^bit * token_scale.
+    +-2^bit * token_scale.  The whole plane stack is one broadcast bit
+    extraction — plane order [pos b0..b_{n-1}, neg b0..b_{n-1}], the same
+    stream order the per-plane loop produced.
     """
     if cfg.dac_bits is None:
         return xf[None], jnp.ones((1, xf.shape[0]), jnp.float32)
@@ -128,30 +173,53 @@ def _dac_stream(xf: jax.Array, cfg: CIMConfig) -> tuple[jax.Array, jax.Array]:
     s_tok = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / q_max
     s_tok = jnp.maximum(s_tok, 1e-12)
     q = jnp.clip(jnp.round(xf / s_tok), -q_max, q_max).astype(jnp.int32)
-    pos, neg = jnp.maximum(q, 0), jnp.maximum(-q, 0)
-    planes, weights = [], []
-    for sign, mag in ((1.0, pos), (-1.0, neg)):
-        for b in range(n_mag):
-            planes.append(((mag >> b) & 1).astype(jnp.float32))
-            weights.append(sign * float(1 << b) * s_tok[:, 0])
-    return jnp.stack(planes), jnp.stack(weights)
+    mag = jnp.stack([jnp.maximum(q, 0), jnp.maximum(-q, 0)])   # (2, T, K)
+    bits = jnp.arange(n_mag, dtype=jnp.int32)
+    planes = ((mag[:, None] >> bits[None, :, None, None]) & 1).astype(
+        jnp.float32
+    )                                                          # (2, n_mag, T, K)
+    signs = jnp.array([1.0, -1.0], jnp.float32)
+    bit_w = signs[:, None] * (2.0 ** bits.astype(jnp.float32))[None, :]
+    weights = bit_w.reshape(-1)[:, None] * s_tok[:, 0][None, :]  # (P, T)
+    t, k = xf.shape
+    return planes.reshape(2 * n_mag, t, k), weights
 
 
-def cim_matmul(x: jax.Array, w: CIMWeight) -> jax.Array:
+def cim_matmul(
+    x: jax.Array, w: CIMWeight, *, token_ids: jax.Array | None = None
+) -> jax.Array:
     """Analog forward for one weight leaf: x (..., K) -> (..., M).
 
     Drop-in for `models.layers.matmul` (f32 accumulation, result cast to
     x.dtype) computing through the live conductance tiles instead of a
-    materialized dense weight.
+    materialized dense weight — ONE fused kernel dispatch and (when
+    noisy) ONE batched noise draw for the whole leaf.  `token_ids`
+    overrides the per-row noise sub-stream ids (default: ambient
+    `token_stream_ids` context, else the flattened batch index).
     """
     cfg: CIMConfig = w.cfg
-    assert w.g_pos.ndim == 4, (
-        "stacked CIMWeight must be layer-sliced before matmul"
-    )
+    if w.g_pos.ndim != 4:
+        raise ValueError(
+            f"CIMWeight {w.name!r}: tile planes must be layer-sliced 4-D "
+            f"(T, S, R, M) at matmul time, got shape {w.g_pos.shape} — "
+            "slice stacked leaves (tree.map / lax.scan) before the forward"
+        )
     lead, k = x.shape[:-1], x.shape[-1]
-    assert k == w.rows_in, (k, w.rows_in, w.name)
+    if k != w.rows_in:
+        raise ValueError(
+            f"CIMWeight {w.name!r}: input features {k} do not match the "
+            f"leaf's {w.rows_in} input rows (tile geometry "
+            f"{w.g_pos.shape} = (tiles, slices, rows, outputs))"
+        )
     xf = x.reshape(-1, k).astype(jnp.float32)
     t = xf.shape[0]
+    if token_ids is None:
+        token_ids = current_token_ids()
+    if token_ids is not None and token_ids.shape != (t,):
+        raise ValueError(
+            f"CIMWeight {w.name!r}: token_ids shape {token_ids.shape} does "
+            f"not match the {t} flattened input rows"
+        )
 
     planes, weights = _dac_stream(xf, cfg)        # (P, T, K), (P, T)
     p = planes.shape[0]
@@ -162,25 +230,21 @@ def cim_matmul(x: jax.Array, w: CIMWeight) -> jax.Array:
     xp = planes.reshape(p * t, n_tiles * r)
     full_scale = cfg.full_scale_frac * 2.0 * r * float(w.levels - 1)
 
-    acc = jnp.zeros((p * t, m), jnp.float32)
-    for ti in range(n_tiles):
-        noise = None
-        if cfg.sigma_read_lsb > 0.0:
-            k_tile = rng.fold_in(w.key, ti)
-            noise = jnp.concatenate(
-                [
-                    ro_noise.sample_token_read_noise(
-                        rng.fold_in(k_tile, pi), t, s, m, cfg.sigma_read_lsb
-                    )
-                    for pi in range(p)
-                ],
-                axis=1,
-            )  # (S, P*T, M)
-        acc = acc + cim_vmm(
-            xp[:, ti * r : (ti + 1) * r], w.g_pos[ti], w.g_neg[ti],
-            bc=w.bc, adc_bits=cfg.adc_bits, full_scale=full_scale,
-            noise=noise, use_pallas=cfg.use_pallas,
-        )
+    noise = None
+    if cfg.sigma_read_lsb > 0.0:
+        key = w.key
+        if w.uid is not None:
+            key = rng.fold_in(key, w.uid)
+        if w.layer_id is not None:
+            key = rng.fold_in(key, w.layer_id)
+        noise = ro_noise.sample_token_read_noise(
+            key, t, s, m, cfg.sigma_read_lsb,
+            token_ids=token_ids, tiles=n_tiles, planes=p,
+        )  # (T_tiles, S, P*T, M)
+    acc = vmm_ops.acim_vmm_tiled(
+        xp, w.g_pos, w.g_neg, bc=w.bc, adc_bits=cfg.adc_bits,
+        full_scale=full_scale, noise=noise, use_pallas=cfg.use_pallas,
+    )
 
     y = jnp.einsum("pt,ptm->tm", weights, acc.reshape(p, t, m))
     y = y * w.scale[None, :]

@@ -32,7 +32,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import rng
 from repro.quant.pack import PackedLayout
 
 __all__ = ["CIMWeight", "slice_planes", "tile_planes", "build_weight", "rekey"]
@@ -46,25 +45,33 @@ class CIMWeight:
     stacked leaves):
       g_pos/g_neg : ([L,] T, S, R, M) per-tile signed conductance planes
       scale       : ([L,] M) per-output-channel dequantization scale
-      key         : ([L,] 2) per-access read-noise key (executor re-folds
-                    it every access; see mvm.py RNG policy)
+      key         : ([L,] 2) per-access read-noise key — the SAME key
+                    broadcast over L; the executor swaps it every access
+                    with one fold + one broadcast (see mvm.py RNG policy)
+      layer_id    : ([L,] ) int32 layer index for stacked leaves (folds
+                    into the noise stream IN-JIT after slicing), None
+                    for plain 2-D leaves
     Static aux:
       rows_in : real input rows per layer (pre tile padding)
       bc      : bits per cell (slice recombination weight base)
       levels  : cell levels (ADC full-scale in LSB units)
       cfg     : CIMConfig (opaque here; consumed by mvm.cim_matmul)
       name    : leaf name (diagnostics)
+      uid     : executor leaf uid folded into the noise stream in-jit
+                (None = no uid sub-stream: direct build_weight users)
     """
 
     g_pos: jax.Array
     g_neg: jax.Array
     scale: jax.Array
     key: jax.Array
-    rows_in: int
-    bc: int
-    levels: int
-    cfg: Any
+    layer_id: jax.Array | None = None
+    rows_in: int = 0
+    bc: int = 0
+    levels: int = 0
+    cfg: Any = None
     name: str = ""
+    uid: int | None = None
 
     @property
     def n_tiles(self) -> int:
@@ -90,8 +97,8 @@ class CIMWeight:
 
 def _flatten(w: CIMWeight):
     return (
-        (w.g_pos, w.g_neg, w.scale, w.key),
-        (w.rows_in, w.bc, w.levels, w.cfg, w.name),
+        (w.g_pos, w.g_neg, w.scale, w.key, w.layer_id),
+        (w.rows_in, w.bc, w.levels, w.cfg, w.name, w.uid),
     )
 
 
@@ -148,7 +155,11 @@ def tile_planes(
 
     if n_layers is None:
         return _tile(g_pos, g_neg, k)
-    assert k % n_layers == 0, (k, n_layers)
+    if k % n_layers:
+        raise ValueError(
+            f"stacked tiling needs K divisible by the layer stack: "
+            f"{k} rows over {n_layers} layers"
+        )
     d = k // n_layers
     r = min(macro_rows, d)
     n_t = -(-d // r)
@@ -164,19 +175,32 @@ def tile_planes(
     return _tile_stacked(g_pos), _tile_stacked(g_neg)
 
 
+def broadcast_key(key: jax.Array, n_layers: int | None) -> jax.Array:
+    """View one key per stacked layer (no fold — the layer sub-stream
+    comes from the `layer_id` child folding in-jit).  `None` = 2-D leaf:
+    the key passes through untouched."""
+    if n_layers is None:
+        return key
+    return jnp.broadcast_to(key, (n_layers, *key.shape))
+
+
 def build_weight(
     state,            # core.programmer.ArrayState (duck-typed: no import cycle)
     cfg: Any,
     key: jax.Array,
     name: str = "",
+    uid: int | None = None,
 ) -> CIMWeight:
     """Re-view one programmed `ArrayState` as inference macro tiles.
 
     3-D leaves (L, d, M) — scanned layer stacks — get a leading L axis on
-    every child (per-layer tiles, broadcast scale, per-layer noise keys
-    ``fold_in(key, layer)``); other shapes tile the flattened (K, M) view
-    directly.  The tiles alias the live `g`: rebuilding after lifetime
-    drift re-views the aged conductances.
+    every child: per-layer tiles, broadcast scale, the key broadcast per
+    layer, and a `layer_id` arange whose sliced scalar folds the layer
+    sub-stream in-jit (``fold_in(key, layer)`` — the same stream the old
+    eager per-layer fold produced).  Other shapes tile the flattened
+    (K, M) view directly.  The tiles alias the live `g`: rebuilding
+    after lifetime drift re-views the aged conductances.  `uid` is the
+    executor's per-leaf noise sub-stream id, also folded in-jit.
 
     Spare-column remap (DESIGN.md Sec. 15): a state carrying a
     `RemapTable` holds PHYSICAL (C + S) rows; served traffic must see
@@ -193,31 +217,36 @@ def build_weight(
     stacked = len(state.shape) == 3
     if stacked:
         n_layers = int(state.shape[0])
+        if g_pos.shape[1] % n_layers:
+            raise ValueError(
+                f"leaf {name!r}: {g_pos.shape[1]} packed input rows do not "
+                f"split over a {n_layers}-layer stack (state shape "
+                f"{tuple(state.shape)})"
+            )
         g_pos, g_neg = tile_planes(g_pos, g_neg, cfg.macro_rows, n_layers)
         scale = jnp.broadcast_to(
             state.scale.reshape(1, -1).astype(jnp.float32),
             (n_layers, layout.m_out),
         )
-        keys = rng.fold_col_keys(key, jnp.arange(n_layers, dtype=jnp.int32))
+        keys = broadcast_key(key, n_layers)
+        layer_id = jnp.arange(n_layers, dtype=jnp.int32)
         rows_in = int(state.shape[1])
     else:
         g_pos, g_neg = tile_planes(g_pos, g_neg, cfg.macro_rows)
         scale = state.scale.reshape(-1).astype(jnp.float32)
         keys = key
+        layer_id = None
         rows_in = layout.k_in
     return CIMWeight(
-        g_pos=g_pos, g_neg=g_neg, scale=scale, key=keys,
+        g_pos=g_pos, g_neg=g_neg, scale=scale, key=keys, layer_id=layer_id,
         rows_in=rows_in, bc=layout.bc, levels=1 << layout.bc, cfg=cfg,
-        name=name,
+        name=name, uid=uid,
     )
 
 
 def rekey(w: CIMWeight, key: jax.Array) -> CIMWeight:
-    """Swap the read-noise key (per-access re-fold; cheap, host-side)."""
-    if w.g_pos.ndim == 5:  # stacked: one sub-stream per layer
-        keys = rng.fold_col_keys(
-            key, jnp.arange(w.g_pos.shape[0], dtype=jnp.int32)
-        )
-    else:
-        keys = key
-    return dataclasses.replace(w, key=keys)
+    """Swap the read-noise key — one broadcast, no per-layer fold (the
+    layer sub-stream folds in-jit from `layer_id`), so the executor's
+    per-access rekey of every leaf is O(1) tiny host dispatches."""
+    n_layers = w.g_pos.shape[0] if w.g_pos.ndim == 5 else None
+    return dataclasses.replace(w, key=broadcast_key(key, n_layers))

@@ -62,6 +62,121 @@ def _acim_kernel(*refs, bc, adc_bits, full_scale, with_noise):
     o_ref[...] = acc
 
 
+def _acim_tiled_kernel(*refs, bc, adc_bits, full_scale, with_noise):
+    """Fused whole-leaf kernel: every macro tile's slice loop + ADC
+    epilogue + tile summation in one VMEM-resident accumulation.
+
+    The per-tile inner accumulator recombines that tile's shifted slices
+    first and the outer accumulator adds tiles in order — the same float
+    association as the scanned reference (`ref.acim_vmm_tiled`), which
+    itself preserves the pre-fusion per-tile Python loop bit-for-bit.
+    """
+    if with_noise:
+        x_ref, gp_ref, gn_ref, nz_ref, o_ref = refs
+    else:
+        x_ref, gp_ref, gn_ref, o_ref = refs
+        nz_ref = None
+    x = x_ref[...]
+    n_tiles, s, r = gp_ref.shape[0], gp_ref.shape[1], gp_ref.shape[2]
+    acc = jnp.zeros((x.shape[0], gp_ref.shape[3]), jnp.float32)
+    if adc_bits is not None:
+        w = full_scale / float(1 << adc_bits)
+        lo = -full_scale / 2.0
+    for ti in range(n_tiles):  # static unroll over macro tiles
+        xi = x[:, ti * r : (ti + 1) * r]
+        tacc = jnp.zeros_like(acc)
+        for l in range(s):  # static unroll over bit slices
+            part = jnp.dot(
+                xi, gp_ref[ti, l] - gn_ref[ti, l],
+                preferred_element_type=jnp.float32,
+            )
+            if nz_ref is not None:
+                part = part + nz_ref[ti, l]
+            if adc_bits is None:
+                tacc = tacc + part * float(1 << (bc * l))
+                continue
+            code = jnp.clip(
+                jnp.round((jnp.clip(part, lo, -lo) - lo) / w),
+                0.0,
+                float((1 << adc_bits) - 1),
+            )
+            tacc = tacc + (lo + code * w) * float(1 << (bc * l))
+        acc = acc + tacc
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bc", "adc_bits", "full_scale", "block_b", "block_m", "interpret"),
+)
+def acim_vmm_tiled_pallas(
+    x: jax.Array,            # (B, T*R)
+    g_pos: jax.Array,        # (T, S, R, M)
+    g_neg: jax.Array,        # (T, S, R, M)
+    noise: jax.Array | None = None,  # (T, S, B, M)
+    *,
+    bc: int,
+    adc_bits: int | None,
+    full_scale: float,
+    block_b: int = 128,
+    block_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """One `pallas_call` for a whole weight leaf: grid over (B, M)
+    blocks, tiles and slices statically unrolled in VMEM.  The K axis
+    stays whole per block (RRAM macro rows are short), so each grid cell
+    reads its x rows once and drives every tile's conductance planes."""
+    b, k = x.shape
+    n_tiles, s, r, m = g_pos.shape
+    assert k == n_tiles * r and g_neg.shape == g_pos.shape
+    if noise is not None:
+        assert noise.shape == (n_tiles, s, b, m), (
+            noise.shape, (n_tiles, s, b, m),
+        )
+    block_b = min(block_b, b)
+    block_m = min(block_m, m)
+    pad_b, pad_m = (-b) % block_b, (-m) % block_m
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+        if noise is not None:
+            noise = jnp.pad(noise, ((0, 0), (0, 0), (0, pad_b), (0, 0)))
+    if pad_m:
+        g_pos = jnp.pad(g_pos, ((0, 0), (0, 0), (0, 0), (0, pad_m)))
+        g_neg = jnp.pad(g_neg, ((0, 0), (0, 0), (0, 0), (0, pad_m)))
+        if noise is not None:
+            noise = jnp.pad(noise, ((0, 0), (0, 0), (0, 0), (0, pad_m)))
+    bb, mm = x.shape[0], g_pos.shape[3]
+
+    in_specs = [
+        pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((n_tiles, s, r, block_m), lambda i, j: (0, 0, 0, j)),
+        pl.BlockSpec((n_tiles, s, r, block_m), lambda i, j: (0, 0, 0, j)),
+    ]
+    operands = [
+        x.astype(jnp.float32),
+        g_pos.astype(jnp.float32),
+        g_neg.astype(jnp.float32),
+    ]
+    if noise is not None:
+        in_specs.append(
+            pl.BlockSpec((n_tiles, s, block_b, block_m), lambda i, j: (0, 0, i, j))
+        )
+        operands.append(noise.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _acim_tiled_kernel, bc=bc, adc_bits=adc_bits,
+            full_scale=full_scale, with_noise=noise is not None,
+        ),
+        grid=(bb // block_b, mm // block_m),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bb, mm), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out[:b, :m]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("bc", "adc_bits", "full_scale", "block_b", "block_m", "interpret"),

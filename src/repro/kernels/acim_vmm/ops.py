@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
-from .acim_vmm import acim_vmm_pallas
+from .acim_vmm import acim_vmm_pallas, acim_vmm_tiled_pallas
 
 
 def acim_vmm(
@@ -24,4 +24,27 @@ def acim_vmm(
     return acim_vmm_pallas(
         x, g_pos, g_neg, noise, bc=bc, adc_bits=adc_bits, full_scale=full_scale,
         interpret=not on_tpu,
+    )
+
+
+def acim_vmm_tiled(
+    x, g_pos, g_neg, *, bc: int, adc_bits: int | None, full_scale: float,
+    noise=None, use_pallas: bool = True,
+):
+    """Whole-leaf fused ACiM VMM: every macro tile in one dispatch.
+
+    x (B, T*R) drives per-tile planes g_pos/g_neg (T, S, R, M) with
+    per-tile pre-ADC `noise` (T, S, B, M); the result (B, M) is the sum
+    over tiles of each tile's ADC-quantized slice recombination.  The
+    Pallas mega-kernel and the scanned reference are bit-identical, and
+    both preserve the pre-fusion per-tile loop's float association.
+    """
+    if not use_pallas:
+        return ref.acim_vmm_tiled(
+            x, g_pos, g_neg, bc, adc_bits, full_scale, noise
+        )
+    on_tpu = jax.default_backend() == "tpu"
+    return acim_vmm_tiled_pallas(
+        x, g_pos, g_neg, noise, bc=bc, adc_bits=adc_bits,
+        full_scale=full_scale, interpret=not on_tpu,
     )

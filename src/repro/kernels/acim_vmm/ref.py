@@ -51,3 +51,40 @@ def acim_vmm(
             part = adc_quantize(part, adc_bits, full_scale)
         acc = acc + part * float(1 << (bc * l))
     return acc
+
+
+def acim_vmm_tiled(
+    x: jax.Array,            # (B, T*R) row drives, tiles contiguous on K
+    g_pos: jax.Array,        # (T, S, R, M) per-tile positive planes
+    g_neg: jax.Array,        # (T, S, R, M) per-tile negative planes
+    bc: int,
+    adc_bits: int | None,
+    full_scale: float,
+    noise: jax.Array | None = None,  # (T, S, B, M) per-tile pre-ADC noise
+) -> jax.Array:
+    """Whole-leaf tiled VMM: every macro tile's readout + tile summation.
+
+    One `lax.scan` over the tile axis, each step the single-tile
+    `acim_vmm` followed by ``acc + tile_result`` — the EXACT float
+    association of the per-tile Python loop this replaced (the outer
+    accumulator adds each tile's fully recombined slice sum), so the
+    fused forward is bit-identical to the pre-fusion path.
+    """
+    n_tiles, s, r, m = g_pos.shape
+    b = x.shape[0]
+    xt = jnp.moveaxis(x.reshape(b, n_tiles, r), 1, 0)  # (T, B, R)
+    acc0 = jnp.zeros((b, m), jnp.float32)
+    if noise is None:
+        def body(acc, op):
+            xi, gp, gn = op
+            return acc + acim_vmm(xi, gp, gn, bc, adc_bits, full_scale), None
+        acc, _ = jax.lax.scan(body, acc0, (xt, g_pos, g_neg))
+    else:
+        def body(acc, op):
+            xi, gp, gn, nz = op
+            return (
+                acc + acim_vmm(xi, gp, gn, bc, adc_bits, full_scale, nz),
+                None,
+            )
+        acc, _ = jax.lax.scan(body, acc0, (xt, g_pos, g_neg, noise))
+    return acc

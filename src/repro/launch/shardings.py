@@ -125,19 +125,23 @@ def cim_weight_specs(mesh: Mesh, w: Any) -> dict[str, NamedSharding]:
     ([L,] M) shard their output-channel axis M over "model" — the same
     TP assignment the dense (L, din, dout) projections use, so the
     analog forward's per-slice ADC readouts stay local to the shard
-    that consumes them.  Noise keys are replicated (a few bytes).
-    Non-divisible M falls back to replicated via `_sanitize`.
+    that consumes them.  Noise keys and the per-layer `layer_id` index
+    are replicated (a few bytes).  Non-divisible M falls back to
+    replicated via `_sanitize`.
     """
     def out_spec(arr):
         spec = P(*([None] * (arr.ndim - 1)), "model")
         return NamedSharding(mesh, _sanitize(mesh, spec, arr.shape))
 
-    return {
+    specs = {
         "g_pos": out_spec(w.g_pos),
         "g_neg": out_spec(w.g_neg),
         "scale": out_spec(w.scale),
         "key": NamedSharding(mesh, P()),
     }
+    if w.layer_id is not None:
+        specs["layer_id"] = NamedSharding(mesh, P())
+    return specs
 
 
 def shard_cim_weight(mesh: Mesh, w: Any) -> Any:

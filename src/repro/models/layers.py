@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cim.mvm import cim_matmul
+from repro.cim.mvm import cim_matmul, current_token_ids
 from repro.cim.tile import CIMWeight
 
 
@@ -32,9 +32,11 @@ def matmul(x, w):
     in-array forward instead: the weight never exists digitally — the
     programmed conductance tiles compute the product, noise and ADC
     included.  Same contract (f32 accumulate, cast back to x.dtype).
+    The ambient token-id stream (`cim.token_stream_ids` — request ids
+    in the serving scheduler) keys the per-row noise sub-streams.
     """
     if isinstance(w, CIMWeight):
-        return cim_matmul(x, w)
+        return cim_matmul(x, w, token_ids=current_token_ids())
     y = jnp.einsum("...k,kn->...n", x, w, preferred_element_type=jnp.float32)
     return y.astype(x.dtype)
 

@@ -21,9 +21,14 @@ batch of per-column keys (`core.rng` fold-in sub-streams, DESIGN.md
 Sec. 10); both route through `core.rng`'s batch-transparent wrappers.
 
 This module also owns the CIM inference read-noise policy (DESIGN.md
-Sec. 11): per-(tile, plane) keys fan out to per-token sub-streams via
-``fold_in(key, token)``, so a token's draw is independent of the batch
-shape it rides in.
+Sec. 17): per-(tile, plane) keys fan out to per-token sub-streams via
+``fold_in(key, token_id)``, so a token's draw is independent of the
+batch shape it rides in — and, with caller-supplied `token_ids`
+(request ids in the serving scheduler), independent of WHICH slot the
+token occupies.  `sample_token_read_noise` samples either one
+(tile, plane)'s (S, T, M) field or — with `tiles`/`planes` — the whole
+(tile, plane, token) lattice for a leaf in ONE batched threefry
+dispatch, bit-identical to the per-(tile, plane) loop it replaces.
 
 Units: cell-LSB throughout.
 """
@@ -64,16 +69,61 @@ def sample_read_fields(
 
 
 def sample_token_read_noise(
-    key: jax.Array, n_tokens: int, n_slices: int, m: int, sigma_lsb: float
+    key: jax.Array,
+    n_tokens: int,
+    n_slices: int,
+    m: int,
+    sigma_lsb: float,
+    *,
+    token_ids: jax.Array | None = None,
+    tiles: int | None = None,
+    planes: int | None = None,
 ) -> jax.Array | None:
-    """Per-read CIM inference noise for one (tile, plane): (S, T, M).
+    """Per-read CIM inference noise; one dispatch for a whole leaf.
 
-    Token sub-streams fold the flattened batch index, so token i's draw
-    is independent of the batch size it rides in.  Returns None when the
-    path is clean (sigma <= 0) so callers can skip the noise operand.
+    Without `tiles`/`planes`: `key` is one (tile, plane) sub-key and the
+    result is (S, T, M) — token t draws from ``fold_in(key, ids[t])``.
+
+    With `tiles`=Ti and `planes`=P: `key` is the LEAF key and the result
+    is (Ti, S, P*T, M), the per-tile noise operand of the fused tiled
+    kernel (`kernels.acim_vmm.acim_vmm_tiled`), where flattened row
+    ``p*T + t`` of tile ti draws from
+
+        fold_in(fold_in(fold_in(key, ti), p), ids[t])
+
+    — the SAME stream the per-(tile, plane) loop produced, materialized
+    by one batched threefry over the full (tile, plane, token) lattice.
+
+    `token_ids` defaults to ``arange(T)`` (flattened batch index); the
+    serving scheduler passes request ids so a token's draw is invariant
+    to slot placement and batch composition.  Returns None when the path
+    is clean (sigma <= 0) so callers can skip the noise operand.
     """
     if sigma_lsb <= 0.0:
         return None
-    tok_keys = rng.fold_col_keys(key, jnp.arange(n_tokens, dtype=jnp.int32))
-    nz = rng.normal(tok_keys, (n_tokens, n_slices, m))
-    return sigma_lsb * jnp.transpose(nz, (1, 0, 2))
+    if token_ids is None:
+        token_ids = jnp.arange(n_tokens, dtype=jnp.int32)
+    token_ids = token_ids.astype(jnp.int32)
+    if (tiles is None) != (planes is None):
+        raise ValueError("tiles and planes must be given together")
+    if tiles is None:
+        tok_keys = rng.fold_col_keys(key, token_ids)
+        nz = rng.normal(tok_keys, (n_tokens, n_slices, m))
+        return sigma_lsb * jnp.transpose(nz, (1, 0, 2))
+    # Whole-lattice path: build every (tile, plane, token) key, then one
+    # batched per-key (S, M) draw — identical per-key tails to the
+    # single-(tile, plane) path above, so the streams are bit-equal.
+    tile_ids = jnp.arange(tiles, dtype=jnp.int32)
+    plane_ids = jnp.arange(planes, dtype=jnp.int32)
+    k_tile = rng.fold_col_keys(key, tile_ids)                    # (Ti, ...)
+    k_tp = jax.vmap(lambda k: rng.fold_col_keys(k, plane_ids))(k_tile)
+    k_tpt = jax.vmap(jax.vmap(lambda k: rng.fold_col_keys(k, token_ids)))(
+        k_tp
+    )                                                            # (Ti, P, T, ...)
+    flat = k_tpt.reshape(tiles * planes * n_tokens, *k_tpt.shape[3:])
+    nz = rng.normal(flat, (tiles * planes * n_tokens, n_slices, m))
+    nz = nz.reshape(tiles, planes, n_tokens, n_slices, m)
+    # (Ti, P, T, S, M) -> (Ti, S, P, T, M) -> (Ti, S, P*T, M): row p*T+t
+    # matches the old concatenate-over-planes layout exactly.
+    nz = jnp.transpose(nz, (0, 3, 1, 2, 4))
+    return sigma_lsb * nz.reshape(tiles, n_slices, planes * n_tokens, m)

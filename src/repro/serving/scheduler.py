@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.cim import token_stream_ids
 from repro.models import decode_step, init_cache, prefill, write_cache_slot
 
 __all__ = [
@@ -225,6 +226,7 @@ class ContinuousScheduler:
         self.tokens_generated = 0
         self.prefill_tokens = 0
         self.wall_s = 0.0
+        self.decode_wall_s = 0.0
 
     # ------------------------------------------------------- step builders
     def _select_token(self, logits: jax.Array, key, rid, gen) -> jax.Array:
@@ -259,9 +261,15 @@ class ContinuousScheduler:
 
         def decode(params, cache, cur, rids, gens, master, dig):
             self.trace_counts["decode"] += 1  # fires at trace time only
-            logits, cache = decode_step(
-                params, cache, {"tokens": cur[:, None]}, cfg, mesh
-            )
+            # Analog CIM leaves fold the REQUEST id (a traced argument —
+            # no retrace) into their per-row noise sub-streams, so a
+            # request's served logits are bit-identical in any slot and
+            # any batch composition (DESIGN.md Sec. 17).  Digital params
+            # ignore the context entirely.
+            with token_stream_ids(rids):
+                logits, cache = decode_step(
+                    params, cache, {"tokens": cur[:, None]}, cfg, mesh
+                )
             last = logits[:, -1] if logits.ndim == 3 else logits[:, -1, 0]
             toks = jax.vmap(
                 lambda l, r, g: self._select_token(l, master, r, g)
@@ -448,6 +456,10 @@ class ContinuousScheduler:
                 emitted += 1
             obs.registry.inc("serve.decode_tokens", emitted)
             sp["tokens"] = emitted
+        # Decode-only wall clock: excludes admission prefill and
+        # interleaved maintenance, so `decode_wall_s / decode_steps` is
+        # the analog/digital datapath step time the benchmarks gate on.
+        self.decode_wall_s += time.perf_counter() - t0
 
     def warmup(
         self,
@@ -516,6 +528,7 @@ class ContinuousScheduler:
         self.tokens_generated = 0
         self.prefill_tokens = 0
         self.wall_s = 0.0
+        self.decode_wall_s = 0.0
         if self.device_metrics:
             self._occ_digest = obs.StreamingDigest.zeros(
                 0.0, self.n_slots + 1.0, self.n_slots + 1
@@ -596,6 +609,12 @@ class ContinuousScheduler:
             "wall_s": self.wall_s,
             "tokens_per_s": (
                 self.tokens_generated / self.wall_s if self.wall_s > 0 else 0.0
+            ),
+            "decode_wall_s": self.decode_wall_s,
+            "decode_step_us": self.decode_wall_s / steps * 1e6,
+            "decode_tokens_per_s": (
+                self.tokens_generated / self.decode_wall_s
+                if self.decode_wall_s > 0 else 0.0
             ),
         }
         if len(lats):

@@ -182,7 +182,92 @@ def generate() -> dict[str, np.ndarray]:
         ))
     )
 
+    # ---- fused analog decode (DESIGN.md Sec. 17) --------------------
+    # The fused single-dispatch forward must regenerate the pre-fusion
+    # per-tile loop bit-exactly.  `_legacy_cim_matmul` below IS that
+    # loop (kept verbatim as the oracle), so the CI --check re-proves
+    # the fusion equivalence — noisy AND zero-noise — on every push.
+    assert np.array_equal(
+        np.asarray(_legacy_cim_matmul(x, cw)), out["cim_y"]
+    ), "fused cim_matmul drifted from the pre-fusion per-tile loop (noisy)"
+    cfg_clean = cim_cfg.replace(sigma_read_lsb=0.0)
+    cw_clean = tile.build_weight(st, cfg_clean, jax.random.PRNGKey(7), "leaf")
+    y_clean = cim_matmul(x, cw_clean)
+    assert np.array_equal(
+        np.asarray(_legacy_cim_matmul(x, cw_clean)), np.asarray(y_clean)
+    ), "fused cim_matmul drifted from the pre-fusion per-tile loop (clean)"
+    out["cim_y_zero_noise"] = np.asarray(y_clean)
+    # Fused Pallas mega-kernel == scanned reference, bit for bit.
+    for tag, base in (("", cim_cfg), ("_zero_noise", cfg_clean)):
+        cw_p = tile.build_weight(
+            st, base.replace(use_pallas=True), jax.random.PRNGKey(7), "leaf"
+        )
+        assert np.array_equal(
+            np.asarray(cim_matmul(x, cw_p)), out[f"cim_y{tag}"]
+        ), f"pallas tiled kernel diverged from reference (cim_y{tag})"
+    # Request-id noise stream: rows keyed by request ids (not batch
+    # slots) — the serving scheduler's batch-composition-invariant
+    # stream, pinned with both executor-style uid and layer sub-streams.
+    rids = jnp.array([11, 3, 7, 5, 2], jnp.int32)
+    out["cim_y_rids"] = np.asarray(cim_matmul(x, cw, token_ids=rids))
+
     return out
+
+
+def _legacy_cim_matmul(x, w):
+    """The pre-fusion `cim_matmul` (PR 8 head), verbatim: Python-listed
+    DAC planes, per-(tile, plane) noise draws concatenated per tile, and
+    an eager per-tile accumulation loop.  The fused path must reproduce
+    it bit-for-bit; kept here as the equivalence oracle for --check."""
+    from repro.core import rng
+    from repro.readout import noise as ro_noise
+    from repro.cim.mvm import cim_vmm
+
+    cfg = w.cfg
+    lead, k = x.shape[:-1], x.shape[-1]
+    xf = x.reshape(-1, k).astype(jnp.float32)
+    t = xf.shape[0]
+    n_mag = cfg.dac_bits - 1
+    q_max = float((1 << n_mag) - 1)
+    s_tok = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / q_max
+    s_tok = jnp.maximum(s_tok, 1e-12)
+    qq = jnp.clip(jnp.round(xf / s_tok), -q_max, q_max).astype(jnp.int32)
+    pos, neg = jnp.maximum(qq, 0), jnp.maximum(-qq, 0)
+    planes, weights = [], []
+    for sign, mag in ((1.0, pos), (-1.0, neg)):
+        for b in range(n_mag):
+            planes.append(((mag >> b) & 1).astype(jnp.float32))
+            weights.append(sign * float(1 << b) * s_tok[:, 0])
+    planes, weights = jnp.stack(planes), jnp.stack(weights)
+    p = planes.shape[0]
+    n_tiles, s, r, m = w.g_pos.shape
+    pad = n_tiles * r - k
+    if pad:
+        planes = jnp.pad(planes, ((0, 0), (0, 0), (0, pad)))
+    xp = planes.reshape(p * t, n_tiles * r)
+    full_scale = cfg.full_scale_frac * 2.0 * r * float(w.levels - 1)
+    acc = jnp.zeros((p * t, m), jnp.float32)
+    for ti in range(n_tiles):
+        noise = None
+        if cfg.sigma_read_lsb > 0.0:
+            k_tile = rng.fold_in(w.key, ti)
+            noise = jnp.concatenate(
+                [
+                    ro_noise.sample_token_read_noise(
+                        rng.fold_in(k_tile, pi), t, s, m, cfg.sigma_read_lsb
+                    )
+                    for pi in range(p)
+                ],
+                axis=1,
+            )
+        acc = acc + cim_vmm(
+            xp[:, ti * r : (ti + 1) * r], w.g_pos[ti], w.g_neg[ti],
+            bc=w.bc, adc_bits=cfg.adc_bits, full_scale=full_scale,
+            noise=noise, use_pallas=cfg.use_pallas,
+        )
+    y = jnp.einsum("pt,ptm->tm", weights, acc.reshape(p, t, m))
+    y = y * w.scale[None, :]
+    return y.reshape(*lead, m).astype(x.dtype)
 
 
 def check() -> int:

@@ -28,6 +28,7 @@ from repro.cim import (
     cim_vmm,
     planes_per_token,
     slice_planes,
+    token_stream_ids,
 )
 from repro.cim.tile import rekey
 from repro.core import ADCConfig, CircuitCost, WVConfig, WVMethod
@@ -173,6 +174,29 @@ def test_cim_forward_fused_vs_reference_bit_identical():
     y_ref_j = jax.jit(cim_matmul)(x, w_ref)
     y_pal_j = jax.jit(cim_matmul)(x, w_pal)
     np.testing.assert_array_equal(np.asarray(y_ref_j), np.asarray(y_pal_j))
+
+
+def test_request_id_stream_batch_composition_invariant():
+    """ISSUE-9 tentpole: request ids (not batch slots) key the CIM noise
+    sub-streams, so a row's analog output depends only on its own id —
+    bit-identical alone, in any slot, and under the ambient
+    `token_stream_ids` context the serving scheduler installs."""
+    state, _ = _synthetic_state(jax.random.PRNGKey(20), k_in=48, m_out=16)
+    cfg = CIMConfig(dac_bits=4, adc_bits=9, sigma_read_lsb=0.4)
+    key = jax.random.PRNGKey(21)
+    w = rekey(build_weight(state, cfg, key, name="inv"), key)
+    x = jax.random.normal(jax.random.PRNGKey(22), (5, 48), jnp.float32)
+    ids = jnp.array([11, 3, 7, 5, 2], jnp.int32)
+    y = cim_matmul(x, w, token_ids=ids)
+    for row in (0, 2, 4):  # alone (batch of 1) vs inside the full batch
+        y1 = cim_matmul(x[row : row + 1], w, token_ids=ids[row : row + 1])
+        np.testing.assert_array_equal(np.asarray(y1[0]), np.asarray(y[row]))
+    perm = jnp.array([4, 0, 3, 1, 2])  # same requests, shuffled slots
+    y_shuf = cim_matmul(x[perm], w, token_ids=ids[perm])
+    np.testing.assert_array_equal(np.asarray(y_shuf), np.asarray(y[perm]))
+    with token_stream_ids(ids):  # scheduler-style ambient stream
+        y_ctx = cim_matmul(x, w)
+    np.testing.assert_array_equal(np.asarray(y_ctx), np.asarray(y))
 
 
 # ------------------------------------------------ RNG policy / noise

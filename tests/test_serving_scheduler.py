@@ -260,6 +260,38 @@ def test_analog_traffic_and_maintenance(deployed_tiny):
     assert leftover >= 0.0
 
 
+def test_analog_batch_composition_invariance(deployed_tiny):
+    """ISSUE-9 tentpole: with request ids folded into the CIM noise
+    stream (via `token_stream_ids`), a request's analog decode logits
+    are bit-identical served alone vs inside a full batch, regardless
+    of which slot it lands in or who its neighbors are."""
+    from repro.cim import token_stream_ids
+    from repro.models import decode_step
+
+    cfg, deployed = deployed_tiny
+    ex = CIMExecutor(
+        deployed, CIMConfig(dac_bits=4, adc_bits=10, sigma_read_lsb=0.3),
+        jax.random.PRNGKey(7),
+    )
+    params = ex.tick(1)  # one access: same leaf keys for every variant
+    prompt = jnp.asarray([[5, 9, 2, 40, 17]], jnp.int32)
+    rid = jnp.asarray([37], jnp.int32)
+    last, cache1 = prefill(params, {"tokens": prompt}, cfg, max_len=48)
+    cur = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+    with token_stream_ids(rid):
+        la, _ = decode_step(params, cache1, {"tokens": cur}, cfg)
+    for slot in (0, 2):
+        cache_b = write_cache_slot(
+            init_cache(cfg, 3, 48), cache1, jnp.int32(slot)
+        )
+        # neighbors: other live requests with their own ids and tokens
+        rids_b = jnp.asarray([3, 11, 29], jnp.int32).at[slot].set(rid[0])
+        cur_b = jnp.full((3, 1), 7, jnp.int32).at[slot].set(cur[0, 0])
+        with token_stream_ids(rids_b):
+            lb, _ = decode_step(params, cache_b, {"tokens": cur_b}, cfg)
+        np.testing.assert_array_equal(np.asarray(la[0]), np.asarray(lb[slot]))
+
+
 def test_incremental_scrub_rotates(deployed_tiny):
     """max_leaves bounds per-epoch scrub work and the cursor visits every
     leaf; aging still applies to all leaves each epoch."""
