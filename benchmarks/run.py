@@ -97,6 +97,16 @@ BASELINE_CHECKS: dict[str, tuple[str, str, list[tuple[str, str, float]]]] = {
         # if per-tile/per-plane Python dispatch ever creeps back.
         ("analog.summary.step_us", "rel", 2.0),
         ("analog.summary.tokens_per_s", "rel", 0.9),
+        # SLO sweep (ISSUE-10): chunked prefill + EDF admission must cut
+        # p99 TTFT vs whole-prompt FIFO on the mixed deadline stream
+        # (>1 = improvement), and the policy variants must serve
+        # byte-identical tokens (0.0 = zero mismatched requests).
+        ("slo.summary.ttft_p99_improvement", "min", 1.0),
+        ("slo.summary.tokens_bit_identical_across_policies", "eq", 0.0),
+        # Data-sharded decode must stay bit-identical to the unsharded
+        # run (0.0 = zero mismatches) with one host sync per step.
+        ("sharded.tokens_bit_identical", "eq", 0.0),
+        ("sharded.host_syncs_per_step", "eq", 0.0),
     ]),
     "fault.tolerance": ("BENCH_faults.json", "BENCH_faults_quick.json", [
         ("contracts.host_syncs_per_deploy", "eq", 0.0),

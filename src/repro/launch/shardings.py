@@ -118,6 +118,71 @@ def cache_sharding(mesh: Mesh, cache_tree: Any, cfg: ModelConfig, global_batch: 
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def decode_batch_sharding(mesh: Mesh, cache_tree: Any) -> Any:
+    """Continuous-batching decode cache: ONLY the batch axis shards,
+    over "data" (DESIGN.md Sec. 18).
+
+    Deliberately NOT `cache_sharding`: that spec also shards the
+    sequence axis over "model", which splits each attention softmax
+    reduction across devices and re-associates the float accumulation —
+    breaking the scheduler's bit-identity contract (a request's tokens
+    must be identical in any shard layout).  Sharding only the batch
+    axis keeps every per-slot reduction local to one device: decode
+    rows are independent, so the math per row is untouched and tokens
+    stay bitwise equal to the unsharded run, while the decode batch and
+    cache memory scale with the "data" axis.  Model/TP parallelism
+    composes orthogonally: CIM tile planes keep sharding their output
+    channels over "model" (`cim_weight_specs`).
+
+    Batch sizes not divisible by the "data" extent fall back to
+    replicated via `_sanitize` (jit argument dims must divide exactly),
+    and extent-1 mesh axes are dropped entirely (`_drop_trivial`): GSPMD
+    canonicalizes them away in jit OUTPUT shardings, so keeping them in
+    the committed input sharding would make the second decode call see
+    a "different" layout and silently re-lower the whole step — a
+    hidden post-warmup compile the trace-count contract cannot see.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        if "pos" in name:              # (B,)
+            spec = P("data")
+        elif nd >= 2:                  # stacked (L, B, ...) layouts
+            spec = P(None, "data", *([None] * (nd - 2)))
+        else:
+            spec = P(*([None] * nd))
+        spec = _drop_trivial(mesh, _sanitize(mesh, spec, leaf.shape))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decode_vec_sharding(mesh: Mesh, n_slots: int) -> NamedSharding:
+    """Sharding for the scheduler's per-slot (B,) vectors (cur tokens,
+    rids, gens): batch over "data", matching `decode_batch_sharding`."""
+    return NamedSharding(
+        mesh, _drop_trivial(mesh, _sanitize(mesh, P("data"), (n_slots,)))
+    )
+
+
+def _drop_trivial(mesh: Mesh, spec: P) -> P:
+    """Remove mesh axes of extent 1 from a spec (partitioning over them
+    is a no-op, and GSPMD strips them from jit output shardings)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = tuple(
+            a for a in (entry if isinstance(entry, tuple) else (entry,))
+            if sizes.get(a, 1) > 1
+        )
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
 def cim_weight_specs(mesh: Mesh, w: Any) -> dict[str, NamedSharding]:
     """Sharding for one `cim.CIMWeight`'s children (analog serving TP).
 

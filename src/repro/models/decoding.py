@@ -166,6 +166,131 @@ def prefill(
 
 
 # --------------------------------------------------------------------------
+def prefill_chunk(
+    params,
+    cache: dict,
+    tokens: jax.Array,      # (1, C) — prompt slice [start, start+C), padded
+    cfg: ModelConfig,
+    mesh=None,
+    *,
+    start: int,             # static: absolute position of tokens[:, 0]
+    slot,                   # traced int32 scalar: batch row in the cache
+    true_len: jax.Array | None = None,  # (1,) — final chunk: emit logits
+    park_pos: int | None = None,        # first chunk: park cache pos here
+):
+    """Prefill ONE bounded chunk of a prompt directly into the shared
+    decode cache at batch row `slot` (chunked prefill, DESIGN.md Sec. 18).
+
+    Bit-compatibility contract: layer bodies mirror `_attn_block_train`
+    exactly, with `chunked_causal_attention(..., pos_offset=start)` over
+    prefix kv (read back from the cache) + this chunk's kv.  When C and
+    `start` are multiples of both attn chunk sizes, the (m, l, acc)
+    online-softmax op sequence for every row is IDENTICAL to the
+    whole-prompt `prefill`, so cache contents over [0, true_len) and the
+    first sampled token are bitwise equal (tests/test_serving_scheduler).
+
+    Decode steps interleave between chunks and blindly advance/write
+    every cache row; `park_pos` (first chunk) moves this slot's position
+    to `max_len`, so interleaved junk writes land out of bounds (scatter
+    drops them) and junk reads are never attended.  The final chunk
+    (true_len given) restores ``pos = true_len - 1`` and returns the
+    last real token's logits; mid chunks return ``(None, cache)``.
+
+    Dense attention stacks only: MoE capacity routing couples tokens
+    across the whole sequence, recurrent blocks absorb padding, and
+    cross/multi-codebook caches are rejected like padded `prefill`.
+    """
+    if cfg.block in ("rwkv6", "hymba"):
+        raise ValueError(
+            f"chunked prefill is attention-only; got block={cfg.block}"
+        )
+    if cfg.is_moe:
+        raise ValueError(
+            "chunked prefill does not support MoE blocks: capacity-based "
+            "routing couples tokens across the whole sequence, so chunk "
+            "boundaries would change the routed computation"
+        )
+    if cfg.n_codebooks > 1 or "cross_k" in cache:
+        raise ValueError(
+            "chunked prefill does not support cross-attention caches or "
+            "multi-codebook heads"
+        )
+    C = tokens.shape[1]
+    for nm, cs in (("attn_chunk_q", cfg.attn_chunk_q),
+                   ("attn_chunk_kv", cfg.attn_chunk_kv)):
+        if C % cs or start % cs:
+            raise ValueError(
+                f"chunk [{start}, {start + C}) must align to {nm}={cs} for "
+                "bit-identity with whole-prompt prefill"
+            )
+    from .act_sharding import constrain
+    from .attention import chunked_causal_attention
+
+    L, _, _, KV, hd = cache["k"].shape
+    x = embed_inputs(params, {"tokens": tokens, "pos_offset": start}, cfg)
+    b = x.shape[0]
+    positions = start + jnp.arange(C)[None, :]
+    lay = params["layers"]
+    if start > 0:
+        k_pre = jax.lax.dynamic_slice(
+            cache["k"], (0, slot, 0, 0, 0), (L, 1, start, KV, hd)
+        )
+        v_pre = jax.lax.dynamic_slice(
+            cache["v"], (0, slot, 0, 0, 0), (L, 1, start, KV, hd)
+        )
+        xs = (jnp.arange(L), k_pre, v_pre)
+    else:
+        xs = (jnp.arange(L),)
+
+    def body(carry, xs_i):
+        x = carry
+        idx, rest = xs_i[0], xs_i[1:]
+        pl = jax.tree.map(lambda a: a[idx], lay)
+        x = constrain(x, mesh, ("batch", None, None))
+        q, k, v = _project_qkv(x, pl, cfg, positions)
+        q = constrain(q, mesh, ("batch", None, "model", None))
+        k = constrain(k, mesh, ("batch", None, "model", None))
+        v = constrain(v, mesh, ("batch", None, "model", None))
+        if rest:
+            kf = jnp.concatenate([rest[0], k], axis=1)
+            vf = jnp.concatenate([rest[1], v], axis=1)
+        else:
+            kf, vf = k, v
+        attn = chunked_causal_attention(
+            q, kf, vf, chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+            window=cfg.sliding_window, pos_offset=start,
+        )
+        attn = matmul(attn.reshape(b, C, cfg.q_dim), pl["wo"])
+        x = constrain(x + attn, mesh, ("batch", None, None))
+        ff, _aux = _ffn(x, pl, cfg, mesh)
+        res_spec = ("batch", None, "model" if cfg.shard_residual else None)
+        return constrain(x + ff, mesh, res_spec), (k, v)
+
+    x, (knew, vnew) = jax.lax.scan(body, x, xs)
+    new_cache = dict(cache)
+    new_cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], knew.astype(cache["k"].dtype), (0, slot, start, 0, 0)
+    )
+    new_cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vnew.astype(cache["v"].dtype), (0, slot, start, 0, 0)
+    )
+    if true_len is not None:
+        new_cache["pos"] = jax.lax.dynamic_update_slice(
+            cache["pos"], (true_len - 1).astype(jnp.int32), (slot,)
+        )
+        logits = output_logits(params, x, cfg, mesh)
+        last = jnp.take_along_axis(
+            logits, (true_len - 1 - start)[:, None, None], axis=1
+        )[:, 0]
+        return last, new_cache
+    if park_pos is not None:
+        new_cache["pos"] = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.full((1,), park_pos, jnp.int32), (slot,)
+        )
+    return None, new_cache
+
+
+# --------------------------------------------------------------------------
 def write_cache_slot(shared: dict, single: dict, slot) -> dict:
     """Insert a single-request cache (B=1, same max_len) into batch slot
     `slot` of a pre-allocated decode cache.

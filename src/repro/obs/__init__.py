@@ -33,7 +33,7 @@ from __future__ import annotations
 import contextlib
 
 from . import digest, health, ledger, metrics, trace
-from .digest import StreamingDigest, digests
+from .digest import StreamingDigest, digests, rank_quantile
 from .health import SLOPolicy, SLORule, fleet_status
 from .health import health as health_registry
 from .ledger import charge
@@ -52,6 +52,7 @@ __all__ = [
     "SLOPolicy",
     "SLORule",
     "digests",
+    "rank_quantile",
     "fleet_status",
     "health_registry",
     "registry",

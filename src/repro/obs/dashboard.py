@@ -205,9 +205,11 @@ def render_html(model: dict) -> str:
         if rep["digests"]:
             body.append("<h3>Latency / pulse digests</h3>")
             body.append(_html_table(
-                ["digest", "count", "mean", "p50", "p95", "p99", "max"],
+                ["digest", "count", "mean", "p50", "p95", "p99", "max",
+                 "under", "over"],
                 [[r["digest"], r["count"], r["mean"], r["p50"], r["p95"],
-                  r["p99"], r["max"]] for r in rep["digests"]],
+                  r["p99"], r["max"], r.get("n_under", 0.0),
+                  r.get("n_over", 0.0)] for r in rep["digests"]],
             ))
         if rep["health"]:
             body.append("<h3>Tile health</h3>")

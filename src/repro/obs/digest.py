@@ -36,11 +36,29 @@ __all__ = [
     "DigestRegistry",
     "digests",
     "observe",
+    "rank_quantile",
     "snapshot",
     "reset",
 ]
 
 _QUANTILES = (0.50, 0.95, 0.99)
+
+
+def rank_quantile(values, q: float) -> float:
+    """THE repo-wide quantile definition: the exact order statistic at
+    rank ``floor(q * (n - 1))`` (== ``np.quantile(..., method="lower")``).
+
+    `StreamingDigest.quantile` estimates the same rank (to bucket
+    resolution), so digest percentiles and array percentiles computed
+    with this function agree within one bucket width — asserted by
+    tests/test_serving_scheduler.py.  Interpolating percentiles
+    (np.percentile's default) disagree with rank-based ones on small
+    samples, which is exactly the serving-p99 regime.
+    """
+    x = np.sort(np.asarray(values, np.float64).ravel())
+    if x.size == 0:
+        raise ValueError("rank_quantile of empty input")
+    return float(x[int(np.floor(float(q) * (x.size - 1)))])
 
 
 def _register():
@@ -61,16 +79,25 @@ class StreamingDigest:
 
     Values below ``lo`` clamp into the first bucket, values at or above
     ``hi`` into the last, so the count never leaks; the one-bucket
-    quantile guarantee holds for in-range values.
+    quantile guarantee holds for in-range values.  Out-of-range values
+    are additionally COUNTED in ``n_under`` / ``n_over`` — clamping is
+    silent about how much of the mass it distorted, and a digest whose
+    top bucket is secretly an overflow bin reports a fake p99.  The
+    counters are pytree children (the static aux stays ``(lo, hi)``),
+    so existing jit carries keep their treedef configuration and never
+    retrace.
     """
 
-    def __init__(self, lo: float, hi: float, counts, total, vmin, vmax):
+    def __init__(self, lo: float, hi: float, counts, total, vmin, vmax,
+                 n_under=None, n_over=None):
         self.lo = float(lo)
         self.hi = float(hi)
         self.counts = counts
         self.total = total
         self.vmin = vmin
         self.vmax = vmax
+        self.n_under = np.float32(0.0) if n_under is None else n_under
+        self.n_over = np.float32(0.0) if n_over is None else n_over
 
     # ------------------------------------------------------------ ctor
     @classmethod
@@ -85,6 +112,8 @@ class StreamingDigest:
             jnp.zeros((), jnp.float32),
             jnp.full((), jnp.inf, jnp.float32),
             jnp.full((), -jnp.inf, jnp.float32),
+            jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32),
         )
 
     @classmethod
@@ -97,6 +126,8 @@ class StreamingDigest:
             np.zeros((), np.float32),
             np.float32(np.inf),
             np.float32(-np.inf),
+            np.float32(0.0),
+            np.float32(0.0),
         )
 
     # ------------------------------------------------------- properties
@@ -128,6 +159,8 @@ class StreamingDigest:
             self.total + jnp.sum(x),
             jnp.minimum(self.vmin, jnp.min(x, initial=jnp.inf)),
             jnp.maximum(self.vmax, jnp.max(x, initial=-jnp.inf)),
+            self.n_under + jnp.sum(x < self.lo).astype(jnp.float32),
+            self.n_over + jnp.sum(x >= self.hi).astype(jnp.float32),
         )
 
     def add_weighted(self, x, weights) -> "StreamingDigest":
@@ -158,6 +191,8 @@ class StreamingDigest:
                 self.vmax,
                 jnp.max(jnp.where(live, x, -jnp.inf), initial=-jnp.inf),
             ),
+            self.n_under + jnp.sum(jnp.where(x < self.lo, w, 0.0)),
+            self.n_over + jnp.sum(jnp.where(x >= self.hi, w, 0.0)),
         )
 
     def observe(self, x) -> None:
@@ -173,6 +208,8 @@ class StreamingDigest:
         self.total = np.float32(self.total + np.sum(x))
         self.vmin = np.float32(min(float(self.vmin), float(np.min(x))))
         self.vmax = np.float32(max(float(self.vmax), float(np.max(x))))
+        self.n_under = np.float32(self.n_under + np.sum(x < self.lo))
+        self.n_over = np.float32(self.n_over + np.sum(x >= self.hi))
 
     def merge(self, other: "StreamingDigest") -> "StreamingDigest":
         """Elementwise merge — requires identical bucket configuration."""
@@ -185,6 +222,8 @@ class StreamingDigest:
             np.asarray(self.total) + np.asarray(other.total),
             np.minimum(np.asarray(self.vmin), np.asarray(other.vmin)),
             np.maximum(np.asarray(self.vmax), np.asarray(other.vmax)),
+            np.asarray(self.n_under) + np.asarray(other.n_under),
+            np.asarray(self.n_over) + np.asarray(other.n_over),
         )
 
     # -------------------------------------------------------- quantiles
@@ -220,6 +259,8 @@ class StreamingDigest:
             out["mean"] = None
             out["min"] = None
             out["max"] = None
+        out["n_under"] = float(np.asarray(self.n_under))
+        out["n_over"] = float(np.asarray(self.n_over))
         for q in _QUANTILES:
             out[f"p{int(q * 100)}"] = self.quantile(q)
         return out
@@ -227,7 +268,8 @@ class StreamingDigest:
     # ------------------------------------------------------------ pytree
     def tree_flatten(self):
         return (
-            (self.counts, self.total, self.vmin, self.vmax),
+            (self.counts, self.total, self.vmin, self.vmax,
+             self.n_under, self.n_over),
             (self.lo, self.hi),
         )
 
@@ -241,6 +283,19 @@ class StreamingDigest:
             f"StreamingDigest(lo={self.lo}, hi={self.hi}, "
             f"n_buckets={self.n_buckets}, count={self.count})"
         )
+
+
+def _host_copy(d: StreamingDigest) -> StreamingDigest:
+    """Deep-copy a fetched digest onto host numpy leaves."""
+    return StreamingDigest(
+        d.lo, d.hi,
+        np.asarray(d.counts, np.float32).copy(),
+        np.float32(np.asarray(d.total)),
+        np.float32(np.asarray(d.vmin)),
+        np.float32(np.asarray(d.vmax)),
+        np.float32(np.asarray(d.n_under)),
+        np.float32(np.asarray(d.n_over)),
+    )
 
 
 class DigestRegistry:
@@ -273,25 +328,13 @@ class DigestRegistry:
         the whole history): re-folding one of those every fetch would
         double-count, so the rider replaces instead of merging.
         """
-        self._digests[name] = StreamingDigest(
-            fetched.lo, fetched.hi,
-            np.asarray(fetched.counts, np.float32).copy(),
-            np.float32(np.asarray(fetched.total)),
-            np.float32(np.asarray(fetched.vmin)),
-            np.float32(np.asarray(fetched.vmax)),
-        )
+        self._digests[name] = _host_copy(fetched)
 
     def fold(self, name: str, fetched: StreamingDigest) -> None:
         """Merge a fetched (numpy-leaved) digest into the named slot."""
         d = self._digests.get(name)
         if d is None:
-            self._digests[name] = StreamingDigest(
-                fetched.lo, fetched.hi,
-                np.asarray(fetched.counts, np.float32).copy(),
-                np.float32(np.asarray(fetched.total)),
-                np.float32(np.asarray(fetched.vmin)),
-                np.float32(np.asarray(fetched.vmax)),
-            )
+            self._digests[name] = _host_copy(fetched)
         else:
             self._digests[name] = d.merge(fetched)
 

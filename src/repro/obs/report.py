@@ -107,6 +107,11 @@ def digest_rows(doc: dict[str, Any]) -> list[dict[str, Any]]:
             "digest": name,
             "count": float(args.get("count") or 0.0),
             **{k: args.get(k) for k in ("mean", "p50", "p95", "p99", "max")},
+            # Out-of-range counts (0.0 for traces emitted before digests
+            # tracked them): a digest clamping mass into its edge
+            # buckets reports fake percentiles, so the table shows it.
+            "n_under": float(args.get("n_under") or 0.0),
+            "n_over": float(args.get("n_over") or 0.0),
         }
     return [rows[k] for k in sorted(rows)]
 
@@ -137,12 +142,14 @@ def _fmt_opt(v: Any) -> str:
 
 
 def render_digests(rows: list[dict[str, Any]]) -> str:
-    cols = ["digest", "count", "mean", "p50", "p95", "p99", "max"]
+    cols = ["digest", "count", "mean", "p50", "p95", "p99", "max",
+            "under", "over"]
     table = [cols[:]]
     for r in rows:
         table.append(
             [r["digest"], f"{r['count']:,.0f}"]
-            + [_fmt_opt(r[c]) for c in cols[2:]]
+            + [_fmt_opt(r[c]) for c in ("mean", "p50", "p95", "p99", "max")]
+            + [f"{r.get('n_under', 0.0):,.0f}", f"{r.get('n_over', 0.0):,.0f}"]
         )
     return _render_table(table)
 

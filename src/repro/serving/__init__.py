@@ -1,7 +1,15 @@
-from .engine import ServeEngine, make_decode_step, make_prefill_step  # noqa: F401
+from .engine import (  # noqa: F401
+    ServeEngine,
+    make_decode_step,
+    make_prefill_chunk_step,
+    make_prefill_step,
+)
 from .scheduler import (  # noqa: F401
+    ADMISSION_POLICIES,
     ContinuousScheduler,
     Request,
     RequestRecord,
+    admission_key,
     poisson_requests,
+    select_next,
 )

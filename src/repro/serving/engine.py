@@ -19,7 +19,13 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
-from repro.models import ModelConfig, decode_step, init_cache, prefill
+from repro.models import (
+    ModelConfig,
+    decode_step,
+    init_cache,
+    prefill,
+    prefill_chunk,
+)
 
 
 def make_prefill_step(cfg: ModelConfig, mesh=None, max_len: int | None = None):
@@ -27,6 +33,26 @@ def make_prefill_step(cfg: ModelConfig, mesh=None, max_len: int | None = None):
         return prefill(params, batch, cfg, mesh, max_len=max_len)
 
     return prefill_step
+
+
+def make_prefill_chunk_step(
+    cfg: ModelConfig, mesh=None, *, start: int, final: bool,
+    park_pos: int | None = None,
+):
+    """Step function for ONE chunk of a chunked prefill (DESIGN.md
+    Sec. 18).  `start` is static (one compiled dispatch per chunk
+    offset — a bounded set, all warmed by `ContinuousScheduler.warmup`);
+    the slot index and true length stay traced, so any request in any
+    slot reuses the same dispatch."""
+
+    def chunk_step(params, cache, tokens, true_len, slot):
+        return prefill_chunk(
+            params, cache, tokens, cfg, mesh, start=start, slot=slot,
+            true_len=true_len if final else None,
+            park_pos=park_pos if start == 0 else None,
+        )
+
+    return chunk_step
 
 
 def make_decode_step(cfg: ModelConfig, mesh=None, sample: bool = False):

@@ -10,6 +10,25 @@ batch of `n_slots` busy against a request queue:
   pre-allocated cache* at the slot index (`models.decoding.prefill`
   with ``true_len`` + `write_cache_slot`).  One compiled dispatch per
   bucket size serves every admission, any slot, any neighbors.
+  Admission ORDER among ready requests is pluggable (`admission_policy`):
+  "fifo" (arrival), "spf" (shortest prompt first), "edf" (earliest
+  TTFT deadline first, `Request.deadline`); `select_next` is the pure,
+  property-tested order.
+* **Chunked prefill** — with `prefill_chunk_tokens=C`, prompts whose
+  bucket exceeds C prefill in C-token chunks interleaved between decode
+  steps (`models.decoding.prefill_chunk` writes each chunk into the
+  shared cache in place), so a short request's first token no longer
+  waits out a long prompt's whole-bucket prefill.  The first chunk
+  parks the slot's cache position at `max_len` (interleaved decode
+  writes for that row land out of bounds and are dropped); the final
+  chunk — the one holding the last REAL token, trailing all-padding
+  chunks are never dispatched — restores ``pos`` and samples the first
+  token from the same per-request sub-stream as whole-prompt admission,
+  so served tokens are bit-identical either way (DESIGN.md Sec. 18).
+* **Clock accounting** — `prefill_tokens_per_step` prices prefill
+  occupancy proportionally to the physical tokens driven (a 64-token
+  bucket charges 4x a 16-token chunk); the legacy constant
+  `prefill_cost_steps` remains the default for old baselines.
 * **Decode** — every step runs the whole batch through ONE jitted step
   of fixed shape; per-slot positions, per-slot stop bookkeeping, and
   per-slot sampling keys mean batch composition never enters the
@@ -43,6 +62,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Any, Callable
 
@@ -52,12 +72,21 @@ import numpy as np
 
 from repro import obs
 from repro.cim import token_stream_ids
-from repro.models import decode_step, init_cache, prefill, write_cache_slot
+from repro.models import (
+    decode_step,
+    init_cache,
+    prefill,
+    prefill_chunk,
+    write_cache_slot,
+)
 
 __all__ = [
+    "ADMISSION_POLICIES",
     "Request",
     "RequestRecord",
     "ContinuousScheduler",
+    "admission_key",
+    "select_next",
     "poisson_requests",
 ]
 
@@ -71,6 +100,42 @@ class Request:
     max_new: int                    # generation budget (includes first token)
     arrival: float = 0.0            # arrival time, decode-step units
     eos_id: int | None = None       # per-request stop token
+    deadline: float | None = None   # absolute TTFT deadline (step clock):
+    #                                 first token must complete by this time
+
+
+ADMISSION_POLICIES = ("fifo", "spf", "edf")
+
+
+def admission_key(policy: str, req: Request):
+    """Total order over ready requests for one admission decision.
+
+    * "fifo" — arrival order (the pre-policy behavior);
+    * "spf"  — shortest prompt first (cheap prefill jumps the queue;
+      can starve long prompts under sustained load — it is here as the
+      classic TTFT-optimal comparison point, not a recommendation);
+    * "edf"  — earliest `Request.deadline` first; deadline-less
+      requests sort last (infinite deadline).
+
+    Ties always break (arrival, rid), so every policy is a strict total
+    order and admission is deterministic — the EDF ordering property in
+    tests/test_serving_scheduler.py holds on exactly this function.
+    """
+    if policy == "fifo":
+        return (req.arrival, req.rid)
+    if policy == "spf":
+        return (len(req.prompt), req.arrival, req.rid)
+    if policy == "edf":
+        d = req.deadline if req.deadline is not None else math.inf
+        return (d, req.arrival, req.rid)
+    raise ValueError(
+        f"unknown admission policy {policy!r}; known: {ADMISSION_POLICIES}"
+    )
+
+
+def select_next(ready: list[Request], policy: str) -> Request:
+    """The request `policy` admits next from the ready set (pure)."""
+    return min(ready, key=lambda r: admission_key(policy, r))
 
 
 @dataclasses.dataclass
@@ -91,6 +156,8 @@ class RequestRecord:
     admit_step: float = 0.0         # admission (prefill dispatch) time
     first_token_step: float = 0.0   # first token completion time
     done_step: float = 0.0          # last token completion time
+    deadline: float | None = None   # absolute TTFT deadline, if any
+    n_chunks: int = 1               # prefill dispatches (1 = whole-bucket)
     tokens: list = dataclasses.field(default_factory=list)
 
     @property
@@ -108,6 +175,30 @@ class RequestRecord:
     @property
     def latency_steps(self) -> float:
         return self.done_step - self.arrival
+
+    @property
+    def deadline_missed(self) -> bool:
+        """True when the first token completed after the TTFT deadline."""
+        return (
+            self.deadline is not None and self.first_token_step > self.deadline
+        )
+
+
+@dataclasses.dataclass
+class _ChunkedPrefill:
+    """In-flight chunked prefill occupying a reserved slot."""
+
+    req: Request
+    padded: np.ndarray              # (1, bucket) right-padded prompt
+    bucket: int
+    chunk: int                      # C, the per-dispatch token count
+    next_start: int = 0
+
+    @property
+    def last_start(self) -> int:
+        """Start of the chunk holding the last REAL token; trailing
+        all-padding chunks are inert junk and are never dispatched."""
+        return (len(self.req.prompt) - 1) // self.chunk * self.chunk
 
 
 def _next_pow2(n: int) -> int:
@@ -153,6 +244,10 @@ class ContinuousScheduler:
         maintenance_fn: Callable[[], Any] | None = None,
         maintenance_every: int = 0,
         prefill_cost_steps: float = 1.0,
+        prefill_tokens_per_step: float | None = None,
+        prefill_chunk_tokens: int | None = None,
+        admission_policy: str = "fifo",
+        batch_mesh=None,
         device_metrics: bool = True,
         name: str = "serve",
     ):
@@ -168,6 +263,49 @@ class ContinuousScheduler:
             )
         self.min_bucket = min_prefill_bucket
         self.prefill_cost_steps = float(prefill_cost_steps)
+        # Proportional prefill pricing (step-clock accounting): a prefill
+        # of n physical tokens occupies the engine n / rate steps.  None
+        # keeps the legacy constant-cost clock for old baselines.
+        self.prefill_tokens_per_step = (
+            float(prefill_tokens_per_step)
+            if prefill_tokens_per_step is not None else None
+        )
+        if admission_policy not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"unknown admission policy {admission_policy!r}; "
+                f"known: {ADMISSION_POLICIES}"
+            )
+        self.admission_policy = admission_policy
+        if prefill_chunk_tokens is not None:
+            c = int(prefill_chunk_tokens)
+            if c < 1 or c & (c - 1):
+                raise ValueError(
+                    f"prefill_chunk_tokens must be a power of two (so every "
+                    f"larger power-of-two bucket divides into whole chunks): {c}"
+                )
+            for nm, cs in (("attn_chunk_q", self.cfg.attn_chunk_q),
+                           ("attn_chunk_kv", self.cfg.attn_chunk_kv)):
+                if c % cs:
+                    raise ValueError(
+                        f"prefill_chunk_tokens={c} must be a multiple of "
+                        f"{nm}={cs}: chunk boundaries must align with the "
+                        "attention kernel's chunk grid for bit-identity "
+                        "with whole-prompt prefill"
+                    )
+            if c >= max_len:
+                raise ValueError(
+                    f"prefill_chunk_tokens={c} >= max_len={max_len}: nothing "
+                    "would ever chunk"
+                )
+            if self.cfg.is_moe:
+                raise ValueError(
+                    "chunked prefill does not support MoE blocks (capacity "
+                    "routing couples tokens across the sequence)"
+                )
+        self.prefill_chunk_tokens = (
+            int(prefill_chunk_tokens) if prefill_chunk_tokens is not None
+            else None
+        )
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.maintenance_fn = maintenance_fn
         self.maintenance_every = maintenance_every
@@ -194,6 +332,23 @@ class ContinuousScheduler:
                 "continuous batching needs a pure attention cache (k/v/pos); "
                 f"got {sorted(cache)} for block={self.cfg.block}"
             )
+        # Data-sharded decode (DESIGN.md Sec. 18): ONLY the batch axis
+        # shards, over "data" — sharding the sequence axis would split
+        # each attention reduction across devices and break the
+        # bit-identity contract.  CIM tile planes shard over "model"
+        # independently (`launch.shardings.cim_weight_specs`).
+        self.batch_mesh = batch_mesh
+        self._vec_sharding = None
+        if batch_mesh is not None:
+            from repro.launch.shardings import (
+                decode_batch_sharding,
+                decode_vec_sharding,
+            )
+
+            cache = jax.device_put(
+                cache, decode_batch_sharding(batch_mesh, cache)
+            )
+            self._vec_sharding = decode_vec_sharding(batch_mesh, n_slots)
         if self.cfg.pos_embedding == "sinusoidal":
             # decode_step applies cache["pos"][0] as the batch-wide
             # embedding offset; heterogeneous per-slot positions would
@@ -208,9 +363,15 @@ class ContinuousScheduler:
 
         # Trace-time side effects: each counter bumps once per compiled
         # trace, so a steady-state serve asserts them flat.
-        self.trace_counts = {"admit": 0, "decode": 0}
+        self.trace_counts = {"admit": 0, "decode": 0, "chunk": 0}
         self._admit_jit = self._build_admit()
         self._decode_jit = jax.jit(self._build_decode())
+        # Chunk dispatches specialize on (start, is_final) ONLY — the
+        # chunk width is fixed and true_len/slot/rid stay traced — so
+        # the compile count is bounded by 2 * max_len / C regardless of
+        # bucket mix, and warmup() covers every reachable pair.
+        self._chunk_jits: dict[tuple[int, bool], Any] = {}
+        self._prefilling: dict[int, _ChunkedPrefill] = {}
 
         self._rid = np.full((n_slots,), -1, np.int32)
         self._gen = np.zeros((n_slots,), np.int32)
@@ -298,14 +459,57 @@ class ContinuousScheduler:
 
         return decode
 
+    def _get_chunk_jit(self, start: int, final: bool):
+        """Compiled dispatch for one prefill chunk at static `start`."""
+        fn = self._chunk_jits.get((start, final))
+        if fn is not None:
+            return fn
+        cfg, mesh, max_len = self.cfg, self.mesh, self.max_len
+
+        def chunk(params, cache, tokens, true_len, rid, master, slot):
+            self.trace_counts["chunk"] += 1  # fires at trace time only
+            last, cache = prefill_chunk(
+                params, cache, tokens, cfg, mesh, start=start, slot=slot,
+                true_len=true_len if final else None,
+                park_pos=max_len if start == 0 else None,
+            )
+            if final:
+                # Same sub-stream as whole-bucket admission: the first
+                # token is bit-identical chunked or not.
+                tok = self._select_token(last[0], master, rid, jnp.int32(0))
+                return tok.astype(jnp.int32), cache
+            return cache
+
+        fn = self._chunk_jits[(start, final)] = jax.jit(chunk)
+        return fn
+
     # ------------------------------------------------------------ plumbing
     def bucket_len(self, prompt_len: int) -> int:
         b = max(_next_pow2(prompt_len), self.min_bucket)
         return min(b, self.max_len)
 
+    def prefill_cost(self, n_tokens: int, bucket: int | None = None) -> float:
+        """Step-clock charge for prefilling `n_tokens` physical tokens.
+
+        Proportional when `prefill_tokens_per_step` is set — a 64-token
+        bucket occupies the engine 4x as long as a 16-token chunk, which
+        is what makes whole-prompt head-of-line blocking visible in
+        queue-delay/TTFT accounting.  Legacy fallback: the constant
+        `prefill_cost_steps` per whole bucket, pro-rated per chunk (so a
+        fully chunked prompt never charges more than the constant).
+        """
+        if self.prefill_tokens_per_step is not None:
+            return n_tokens / self.prefill_tokens_per_step
+        if bucket is None or n_tokens >= bucket:
+            return self.prefill_cost_steps
+        return self.prefill_cost_steps * n_tokens / bucket
+
     def _free_slot(self) -> int | None:
-        free = np.flatnonzero(self._rid < 0)
-        return int(free[0]) if free.size else None
+        free = [
+            i for i in range(self.n_slots)
+            if self._rid[i] < 0 and i not in self._prefilling
+        ]
+        return free[0] if free else None
 
     def active_slots(self) -> int:
         return int(np.sum(self._rid >= 0))
@@ -353,14 +557,24 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------- serving
     def admit(self, req: Request, slot: int | None = None) -> int:
-        """Prefill `req` into a free slot of the shared cache."""
+        """Prefill `req` into a free slot of the shared cache.
+
+        Whole-bucket admission (bucket <= `prefill_chunk_tokens`, or
+        chunking disabled) dispatches one prefill and emits the first
+        token before returning.  Chunked admission reserves the slot and
+        dispatches only the FIRST chunk; `run()` (or a manual driver
+        calling `prefill_tick()`) interleaves the remaining chunks
+        between decode steps, and the first token is emitted by the
+        final chunk.
+        """
         if slot is None:
             slot = self._free_slot()
         if slot is None:
             raise RuntimeError("no free slot")
-        if self._rid[slot] >= 0:
+        if self._rid[slot] >= 0 or slot in self._prefilling:
             raise RuntimeError(
-                f"slot {slot} is occupied by request {self._rid[slot]}"
+                f"slot {slot} is occupied by request "
+                f"{self._rid[slot] if self._rid[slot] >= 0 else self._prefilling[slot].req.rid}"
             )
         plen = len(req.prompt)
         if plen < 1:
@@ -371,11 +585,34 @@ class ContinuousScheduler:
                 f"exceeds max_len {self.max_len}"
             )
         bucket = self.bucket_len(plen)
+        chunk = self.prefill_chunk_tokens
+        chunked = chunk is not None and bucket > chunk
+        padded_len = bucket if not chunked else (
+            ((plen - 1) // chunk + 1) * chunk
+        )
+        padded = np.zeros((1, padded_len), np.int32)
+        padded[0, :plen] = np.asarray(req.prompt, np.int32)
+        self.records[req.rid] = RequestRecord(
+            rid=req.rid, arrival=req.arrival, prompt_len=plen,
+            bucket_len=bucket, admit_step=self.now, deadline=req.deadline,
+            n_chunks=(plen - 1) // chunk + 1 if chunked else 1,
+        )
+        obs.digests.observe(
+            f"{self.name}.queue_delay_steps", self.now - req.arrival,
+            lo=0.0, hi=self._digest_hi(), n_buckets=128,
+        )
+        self.admits += 1
+        obs.registry.inc("serve.admits")
+        self._slot_req[slot] = req
+        if chunked:
+            self._prefilling[slot] = _ChunkedPrefill(
+                req=req, padded=padded, bucket=bucket, chunk=chunk
+            )
+            self._dispatch_chunk(slot)
+            return slot
         with obs.span(
             "serve.admit", cat="serve", rid=req.rid, bucket=bucket, slot=slot
         ):
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :plen] = np.asarray(req.prompt, np.int32)
             params = self.engine.access_params(bucket)  # physical prefill toks
             with jax.transfer_guard_device_to_host("disallow"):
                 tok, self.cache = self._admit_jit(
@@ -389,26 +626,65 @@ class ContinuousScheduler:
                 )
             tok = int(jax.device_get(tok))  # the one (small) admit sync
         self.admit_syncs += 1
-        self.admits += 1
         self.prefill_tokens += bucket
-        obs.registry.inc("serve.admits")
         obs.registry.inc("serve.prefill_tokens", bucket)
         self._rid[slot] = req.rid
         self._gen[slot] = 0
-        self._slot_req[slot] = req
-        self.records[req.rid] = RequestRecord(
-            rid=req.rid, arrival=req.arrival, prompt_len=plen,
-            bucket_len=bucket, admit_step=self.now,
-        )
-        obs.digests.observe(
-            f"{self.name}.queue_delay_steps", self.now - req.arrival,
-            lo=0.0, hi=self._digest_hi(), n_buckets=128,
-        )
         # The prefill occupies the engine: advance the clock before the
         # first token completes.
-        self.now += self.prefill_cost_steps
+        self.now += self.prefill_cost(bucket, bucket)
         self._emit(slot, tok, self.now)
         return slot
+
+    def _dispatch_chunk(self, slot: int) -> None:
+        """Run ONE chunk of the in-flight prefill reserved on `slot`."""
+        st = self._prefilling[slot]
+        start, chunk = st.next_start, st.chunk
+        final = start == st.last_start
+        req = st.req
+        with obs.span(
+            "serve.prefill_chunk", cat="serve", rid=req.rid, start=start,
+            slot=slot, final=final,
+        ):
+            fn = self._get_chunk_jit(start, final)
+            tokens = jnp.asarray(st.padded[:, start:start + chunk])
+            params = self.engine.access_params(chunk)  # physical chunk toks
+            with jax.transfer_guard_device_to_host("disallow"):
+                out = fn(
+                    params,
+                    self.cache,
+                    tokens,
+                    jnp.asarray([len(req.prompt)], jnp.int32),
+                    jnp.int32(req.rid),
+                    self.key,
+                    jnp.int32(slot),
+                )
+            if final:
+                tok, self.cache = out
+                tok = int(jax.device_get(tok))  # the one (small) admit sync
+                self.admit_syncs += 1
+            else:
+                self.cache = out
+        self.prefill_tokens += chunk
+        obs.registry.inc("serve.prefill_tokens", chunk)
+        self.now += self.prefill_cost(chunk, st.bucket)
+        st.next_start = start + chunk
+        if final:
+            del self._prefilling[slot]
+            self._rid[slot] = req.rid
+            self._gen[slot] = 0
+            self._emit(slot, tok, self.now)
+
+    def prefill_tick(self) -> bool:
+        """Dispatch ONE pending prefill chunk (the oldest reservation);
+        returns False when no chunked prefill is in flight.  `run()`
+        calls this once per loop iteration, interleaving chunks between
+        decode steps."""
+        if not self._prefilling:
+            return False
+        slot = next(iter(self._prefilling))
+        self._dispatch_chunk(slot)
+        return True
 
     def step(self) -> None:
         """One decode step of the whole batch + slot bookkeeping.
@@ -422,13 +698,25 @@ class ContinuousScheduler:
         t0 = time.perf_counter()
         with obs.span("serve.decode", cat="serve") as sp:
             params = self.engine.access_params(self.n_slots)
+            if self._vec_sharding is not None:
+                # Host->device placements (allowed under the guard): the
+                # per-slot vectors land pre-sharded over "data" so the
+                # compiled step never reshards its batch inputs.
+                vecs = [
+                    jax.device_put(v, self._vec_sharding)
+                    for v in (self._cur, self._rid, self._gen)
+                ]
+            else:
+                vecs = [
+                    jnp.asarray(self._cur),
+                    jnp.asarray(self._rid),
+                    jnp.asarray(self._gen),
+                ]
             with jax.transfer_guard_device_to_host("disallow"):
                 toks, m, dig, self.cache = self._decode_jit(
                     params,
                     self.cache,
-                    jnp.asarray(self._cur),
-                    jnp.asarray(self._rid),
-                    jnp.asarray(self._gen),
+                    *vecs,
                     self.key,
                     self._occ_digest,
                 )
@@ -476,12 +764,43 @@ class ContinuousScheduler:
         """
         if prompt_range is not None:
             lo, hi = prompt_range
-            # derive the warmed set from the same mapping real traffic
-            # uses, so it can never diverge from bucket_len()
-            buckets = sorted({self.bucket_len(p) for p in range(lo, hi + 1)})
+            plens = list(range(lo, hi + 1))
         else:
-            prompt_lens = prompt_lens or [self.min_bucket]
-            buckets = sorted({self.bucket_len(p) for p in prompt_lens})
+            plens = list(prompt_lens or [self.min_bucket])
+        # derive the warmed set from the same mapping real traffic
+        # uses, so it can never diverge from bucket_len()
+        chunk = self.prefill_chunk_tokens
+        buckets = sorted({
+            self.bucket_len(p) for p in plens
+            if chunk is None or self.bucket_len(p) <= chunk
+        })
+        if chunk is not None:
+            # Chunked buckets: warm every reachable (start, is_final)
+            # dispatch pair.  One dummy admission per distinct final-
+            # chunk offset covers them all (its mid chunks warm every
+            # smaller start; chunk jits are bucket-independent).
+            lasts = sorted({
+                (p - 1) // chunk * chunk for p in plens
+                if self.bucket_len(p) > chunk and p + 1 <= self.max_len
+            })
+            for j, last in enumerate(lasts):
+                plen = max(
+                    p for p in plens
+                    if self.bucket_len(p) > chunk
+                    and (p - 1) // chunk * chunk == last
+                    and p + 1 <= self.max_len
+                )
+                slot = self._free_slot()
+                if slot is None:
+                    self._finish(0)
+                    slot = 0
+                self.admit(
+                    Request(rid=(1 << 29) + j, prompt=[0] * plen, max_new=1,
+                            arrival=self.now),
+                    slot,
+                )
+                while slot in self._prefilling:
+                    self.prefill_tick()
         for i, b in enumerate(buckets):
             slot = self._free_slot()
             if slot is None:  # more buckets than slots: recycle slot 0
@@ -510,6 +829,13 @@ class ContinuousScheduler:
                         max_new=2, arrival=self.now)
             )
         self.step()
+        # Second step: the first decode consumes the FRESH occupancy
+        # digest (host-born leaves); every later step consumes the
+        # previous step's OUTPUT digest, whose sharding a batch_mesh
+        # jit stamps differently.  Both variants must be compiled here,
+        # or the first post-warmup steady-state step silently re-lowers
+        # (invisible to trace_counts — jax reuses the python trace).
+        self.step()
         self.reset(keep_traces=True)
 
     def reset(self, keep_traces: bool = False) -> None:
@@ -518,6 +844,7 @@ class ContinuousScheduler:
         self._gen[:] = 0
         self._cur[:] = 0
         self._slot_req = [None] * self.n_slots
+        self._prefilling = {}
         self.records = {}
         self.completed = []
         self.now = 0.0
@@ -535,49 +862,64 @@ class ContinuousScheduler:
             )
         obs.digests.reset(f"{self.name}.")
         if not keep_traces:
-            self.trace_counts = {"admit": 0, "decode": 0}
+            self.trace_counts = {"admit": 0, "decode": 0, "chunk": 0}
 
     def run(
         self, requests: list[Request], *, max_steps: int = 1_000_000
     ) -> list[RequestRecord]:
-        """Serve an arrival stream to completion (FIFO admission).
+        """Serve an arrival stream to completion.
 
-        The clock is the decode step: each step advances `now` by 1, and
-        idle periods fast-forward to the next arrival.  Returns the
-        completed `RequestRecord`s sorted by rid.
+        The clock is the decode step: each step advances `now` by 1,
+        prefills charge `prefill_cost`, and idle periods fast-forward to
+        the next arrival.  Ready requests (arrived, not yet admitted)
+        are admitted into free slots in `admission_policy` order; with
+        chunked prefill enabled, ONE pending chunk is dispatched per
+        loop iteration before the decode step, so long-prompt prefills
+        interleave with (rather than block) decode traffic.  Returns
+        the completed `RequestRecord`s sorted by rid.
         """
         pending = collections.deque(
             sorted(requests, key=lambda r: (r.arrival, r.rid))
         )
+        ready: list[Request] = []
         t0 = time.perf_counter()
         steps0 = self.decode_steps
         with obs.span(
             "serve.run", cat="serve", requests=len(requests),
-            n_slots=self.n_slots,
+            n_slots=self.n_slots, policy=self.admission_policy,
         ) as sp:
-            while pending or self.active_slots():
-                while (
-                    pending
-                    and pending[0].arrival <= self.now
-                    and self._free_slot() is not None
-                ):
-                    self.admit(pending.popleft())
-                if not self.active_slots():
-                    if not pending:  # last request completed at admission
+            while pending or ready or self.active_slots() or self._prefilling:
+                while pending and pending[0].arrival <= self.now:
+                    ready.append(pending.popleft())
+                progressed = False
+                while ready and self._free_slot() is not None:
+                    req = select_next(ready, self.admission_policy)
+                    ready.remove(req)
+                    self.admit(req)
+                    progressed = True
+                    # admission advanced the clock: newly arrived
+                    # requests join the ready set before the next pick
+                    while pending and pending[0].arrival <= self.now:
+                        ready.append(pending.popleft())
+                if self.prefill_tick():
+                    progressed = True
+                if self.active_slots():
+                    self.step()
+                    self.now += 1.0
+                    progressed = True
+                    if (
+                        self.maintenance_fn is not None
+                        and self.maintenance_every > 0
+                        and self.decode_steps % self.maintenance_every == 0
+                    ):
+                        with obs.span("serve.maintenance", cat="serve"):
+                            self.maintenance_fn()
+                    if self.decode_steps - steps0 >= max_steps:
+                        break
+                if not progressed:
+                    if not pending:  # every remaining request finished
                         break
                     self.now = max(self.now, pending[0].arrival)
-                    continue
-                self.step()
-                self.now += 1.0
-                if (
-                    self.maintenance_fn is not None
-                    and self.maintenance_every > 0
-                    and self.decode_steps % self.maintenance_every == 0
-                ):
-                    with obs.span("serve.maintenance", cat="serve"):
-                        self.maintenance_fn()
-                if self.decode_steps - steps0 >= max_steps:
-                    break
             sp["decode_steps"] = self.decode_steps - steps0
             sp["completed"] = len(self.completed)
         self.wall_s += time.perf_counter() - t0
@@ -596,7 +938,15 @@ class ContinuousScheduler:
         }
 
     def latency_stats(self) -> dict[str, float]:
-        """Aggregate latency/throughput stats over completed requests."""
+        """Aggregate latency/throughput stats over completed requests.
+
+        Percentiles use `obs.rank_quantile` — the SAME rank-based
+        definition `StreamingDigest.quantile` estimates — so the exact
+        stats here and the streaming `digest_stats()` agree to bucket
+        resolution (asserted by tests).  np.percentile's interpolating
+        default disagrees with the digests on small samples, which is
+        exactly the p99 regime these numbers gate.
+        """
         lats = np.array([r.latency_steps for r in self.completed])
         ttfts = np.array([r.ttft_steps for r in self.completed])
         queue = np.array([r.queue_delay_steps for r in self.completed])
@@ -619,12 +969,18 @@ class ContinuousScheduler:
         }
         if len(lats):
             out.update(
-                p50_latency_steps=float(np.percentile(lats, 50)),
-                p99_latency_steps=float(np.percentile(lats, 99)),
-                p50_ttft_steps=float(np.percentile(ttfts, 50)),
-                p99_ttft_steps=float(np.percentile(ttfts, 99)),
+                p50_latency_steps=obs.rank_quantile(lats, 0.50),
+                p99_latency_steps=obs.rank_quantile(lats, 0.99),
+                p50_ttft_steps=obs.rank_quantile(ttfts, 0.50),
+                p99_ttft_steps=obs.rank_quantile(ttfts, 0.99),
                 mean_queue_delay_steps=float(queue.mean()),
             )
+        with_deadline = [r for r in self.completed if r.deadline is not None]
+        if with_deadline:
+            missed = sum(r.deadline_missed for r in with_deadline)
+            out["deadline_requests"] = float(len(with_deadline))
+            out["deadline_misses"] = float(missed)
+            out["deadline_miss_rate"] = missed / len(with_deadline)
         return out
 
 
@@ -638,18 +994,35 @@ def poisson_requests(
     max_new: tuple[int, int] = (4, 16),
     eos_id: int | None = None,
     start_rid: int = 0,
+    long_prompt_lens: tuple[int, int] | None = None,
+    long_frac: float = 0.0,
+    ttft_slack: tuple[float, float] | None = None,
 ) -> list[Request]:
     """A Poisson arrival stream of variable-length requests.
 
     `rate` is the offered load in requests per decode step; inter-arrival
     times are Exp(1/rate).  Prompt lengths and generation budgets draw
     uniformly from their (lo, hi) ranges.
+
+    `long_prompt_lens` + `long_frac` mix in a heavy-tail fraction of
+    long prompts (the SLO benchmark's head-of-line-blocking stressor);
+    `ttft_slack=(lo, hi)` attaches a TTFT deadline of ``arrival +
+    Uniform(lo, hi)`` steps to every request (EDF admission input and
+    the deadline-miss-rate denominator).
     """
     g = np.random.default_rng(seed)
     arrivals = np.cumsum(g.exponential(1.0 / rate, size=n))
     reqs = []
     for i in range(n):
-        plen = int(g.integers(prompt_lens[0], prompt_lens[1] + 1))
+        lens = prompt_lens
+        if long_prompt_lens is not None and g.random() < long_frac:
+            lens = long_prompt_lens
+        plen = int(g.integers(lens[0], lens[1] + 1))
+        deadline = None
+        if ttft_slack is not None:
+            deadline = float(
+                arrivals[i] + g.uniform(ttft_slack[0], ttft_slack[1])
+            )
         reqs.append(
             Request(
                 rid=start_rid + i,
@@ -657,6 +1030,7 @@ def poisson_requests(
                 max_new=int(g.integers(max_new[0], max_new[1] + 1)),
                 arrival=float(arrivals[i]),
                 eos_id=eos_id,
+                deadline=deadline,
             )
         )
     return reqs

@@ -122,3 +122,55 @@ def test_empty_digest_quantiles_none():
     assert d.quantile(0.5) is None
     s = d.summary()
     assert s["count"] == 0 and s["p99"] is None and s["mean"] is None
+    assert s["n_under"] == 0.0 and s["n_over"] == 0.0
+
+
+def test_out_of_range_counts_observed():
+    """Values outside [lo, hi) still clamp into the edge buckets (no
+    count leaks) but are COUNTED, so a digest whose top bucket is
+    secretly an overflow bin is visible in summaries (ISSUE-10: the
+    step_latency_us hi=1e5 clip silently ate slow-step mass)."""
+    d = StreamingDigest.host(0.0, 10.0, 10)
+    d.observe(np.asarray([-3.0, 5.0, 5.0, 10.0, 12.0, 9.99], np.float32))
+    assert d.count == 6.0  # clamped mass still counted in the histogram
+    assert float(d.n_under) == 1.0
+    assert float(d.n_over) == 2.0  # hi itself is out of [lo, hi)
+    s = d.summary()
+    assert (s["n_under"], s["n_over"]) == (1.0, 2.0)
+    # in-range-only digests report zero — the common healthy case
+    clean = StreamingDigest.host(0.0, 10.0, 10)
+    clean.observe(np.linspace(0.0, 9.9, 50).astype(np.float32))
+    assert float(clean.n_under) == 0.0 and float(clean.n_over) == 0.0
+    # merge adds the counters like any other count
+    m = d.merge(d)
+    assert (float(m.n_under), float(m.n_over)) == (2.0, 4.0)
+
+
+def test_overflow_counters_ride_jit_without_retrace():
+    """The traced `add` path counts out-of-range values, the counters are
+    pytree CHILDREN (aux stays (lo, hi)), and a warmed dispatch never
+    retraces — the scheduler's in-jit occupancy digest relies on this."""
+    import jax
+    import jax.numpy as jnp
+
+    d = StreamingDigest.zeros(0.0, 4.0, 4)
+    traces = []
+
+    @jax.jit
+    def step(dig, x):
+        traces.append(1)  # trace-time side effect
+        return dig.add(x)
+
+    for v in (1.0, -2.0, 7.0, 3.5):
+        d = step(d, jnp.float32(v))
+    assert len(traces) == 1, "digest operand retraced a warmed dispatch"
+    host = jax.device_get(d)
+    assert float(host.n_under) == 1.0
+    assert float(host.n_over) == 1.0
+    assert host.count == 4.0
+    # weighted path: out-of-range mass carries its weight
+    w = StreamingDigest.zeros(0.0, 4.0, 4).add_weighted(
+        jnp.asarray([-1.0, 2.0, 9.0]), jnp.asarray([3.0, 1.0, 2.0])
+    )
+    w = jax.device_get(w)
+    assert (float(w.n_under), float(w.n_over)) == (3.0, 2.0)
